@@ -1,0 +1,35 @@
+"""Fig 11 / §III-E analogue: LUT-generator adder counts.
+
+Paper: the two-step tree generator needs 14 additions for the complete
+mu=4 hFFLUT (42% fewer than naive), and beats k independent RAC adder
+chains for k > 4.
+"""
+from repro.core import lut
+from benchmarks import common
+
+
+def run():
+    common.header("Fig 11 analogue — LUT generator adder counts")
+    naive = lut.naive_adder_count(4, half=True)
+    tree = lut.generator_adder_count(4, half=True)
+    saving = 1 - tree / naive
+    print(f"fig11,mu=4,tree_adds={tree},naive_adds={naive},saving={saving:.0%}")
+    assert tree == 14 and naive == 24
+    assert abs(saving - 0.42) < 0.01
+
+    # break-even vs straightforward hardware: k RACs need k*(mu-1) adds
+    for k in (2, 4, 5, 8, 32):
+        straightforward = k * 3
+        wins = tree < straightforward
+        print(f"fig11,break_even,k={k},lut_gen={tree},direct={straightforward},"
+              f"lut_wins={wins}")
+    assert lut.generator_adder_count(4) < 5 * 3       # wins for k=5
+    assert lut.generator_adder_count(4) > 4 * 3       # not yet at k=4
+    for mu in (2, 4, 6, 8):
+        print(f"fig11,scaling,mu={mu},tree={lut.generator_adder_count(mu)},"
+              f"naive={lut.naive_adder_count(mu)}")
+    return tree, naive
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Fig 13/14 analogue: area breakdown + TOPS/mm^2 across engines.
+
+Paper claims checked:
+  * FPE has the largest arithmetic area (FP mul + dequant); FIGLUT-F
+    smaller (FP add not mul); integer engines smaller still (Fig 14);
+  * LUT-based design reduces flip-flop area vs iFPU's deep serial pipes;
+  * proposed engines reach up to ~1.5x FIGNA's TOPS/mm^2 at sub-4-bit
+    (Fig 13); bit-serial engines lose at Q8 (2x cycles).
+"""
+from repro.core import energy_model as em
+from benchmarks import common
+
+
+def run():
+    common.header("Fig 13/14 analogue — area & TOPS/mm^2")
+    areas = {}
+    for eng in ("FPE", "iFPU", "FIGNA", "FIGLUT-F", "FIGLUT-I"):
+        a = em.engine_area_mm2(eng, q=4)
+        areas[eng] = a
+        print(f"fig14,q4,{eng},arith={a['arith_mm2']:.2f}mm2,"
+              f"ff={a['ff_mm2']:.2f}mm2,total={a['total_mm2']:.2f}mm2")
+    assert areas["FPE"]["arith_mm2"] > areas["FIGLUT-F"]["arith_mm2"]
+    assert areas["FIGLUT-F"]["arith_mm2"] > areas["FIGLUT-I"]["arith_mm2"]
+    assert areas["FIGLUT-I"]["ff_mm2"] < areas["iFPU"]["ff_mm2"]
+
+    # TOPS/mm^2 on OPT models: throughput from the energy model's timing
+    for model in ("opt-1.3b", "opt-6.7b", "opt-30b"):
+        row = []
+        for eng in ("FPE", "iFPU", "FIGNA", "FIGLUT-I"):
+            r = em.model_report(eng, model, B=32, q=4)
+            t_per_mm2 = r.tops / areas[eng]["total_mm2"]
+            row.append((eng, t_per_mm2))
+            print(f"fig13,{model},q4,{eng},TOPS/mm2={t_per_mm2:.3f}")
+        d = dict(row)
+        ratio = d["FIGLUT-I"] / d["FIGNA"]
+        print(f"fig13,{model},FIGLUT/FIGNA_area_eff={ratio:.2f} (paper: up to ~1.5)")
+
+    # Q8: bit-serial engines take 2x cycles -> area efficiency drops (paper)
+    r4 = em.model_report("FIGLUT-I", "opt-6.7b", B=32, q=4)
+    r8 = em.model_report("FIGLUT-I", "opt-6.7b", B=32, q=8)
+    print(f"fig13,q8_penalty,FIGLUT TOPS q4={r4.tops:.3f} q8={r8.tops:.3f}")
+    assert r8.tops < r4.tops
+    return areas
+
+
+if __name__ == "__main__":
+    run()

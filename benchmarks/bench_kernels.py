@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret mode) vs oracles.
+
+Wall-times here are CPU-interpret numbers — NOT TPU performance — but
+they pin correctness at benchmark scale and record the op-count ratios
+the TPU roofline uses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import bcq
+from repro.kernels.lut_gemm import lut_gemm, ref as lref
+from repro.kernels.bcq_matmul import bcq_matmul
+
+
+def run():
+    common.header("Kernel benches (interpret mode, correctness + timing)")
+    rng = np.random.default_rng(0)
+    M, N, B = 256, 512, 8
+    W = jnp.array(rng.normal(size=(M, N)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(B, N)).astype(np.float32))
+    wq = bcq.from_uniform(W, bits=4, group_size=128)
+    want = lref.dense_ref(x, wq)
+
+    y1 = lut_gemm(x, wq, interpret=True)
+    err1 = float(jnp.abs(y1 - want).max())
+    y2 = bcq_matmul(x, wq, interpret=True)
+    err2 = float(jnp.abs(y2 - want).max())
+    print(f"kernels,lut_gemm_maxerr={err1:.2e},bcq_matmul_maxerr={err2:.2e}")
+    assert err1 < 1e-3 and err2 < 1e-3
+
+    common.bench("kernels,lut_gemm_interpret",
+                 lambda: jax.block_until_ready(lut_gemm(x, wq, interpret=True)),
+                 n=2)
+    common.bench("kernels,bcq_matmul_interpret",
+                 lambda: jax.block_until_ready(bcq_matmul(x, wq, interpret=True)),
+                 n=2)
+    common.bench("kernels,dense_oracle",
+                 lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
+    return err1, err2
+
+
+if __name__ == "__main__":
+    run()

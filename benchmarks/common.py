@@ -1,0 +1,95 @@
+"""Shared benchmark infrastructure.
+
+``tiny_lm()`` trains (once, cached on disk) a small OPT-style LM on the
+synthetic corpus so quantization benchmarks report *real perplexities* —
+the CPU-scale analogue of the paper's OPT-family WikiText-2 evaluation.
+
+``bench(name, fn)`` times a callable and returns the paper-harness CSV
+row format: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+TINY_DIR = os.path.join(RESULTS, "tiny_lm")
+
+TINY_CFG = get_reduced("opt_6_7b").replace(
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+    d_ff=1024, vocab_size=2048, max_seq_len=256, remat=False,
+    scan_layers=False)
+
+_SEQ = 128
+_BATCH = 16
+
+
+def _pipeline(shard=0):
+    return SyntheticLM(vocab_size=TINY_CFG.vocab_size, seq_len=_SEQ,
+                       global_batch=_BATCH, seed=7, data_shard=shard)
+
+
+def tiny_lm(steps: int = 400, force: bool = False):
+    """(model, params) — trained once, checkpoint-cached."""
+    model = Model(TINY_CFG)
+    if not force and ckpt.latest_step(TINY_DIR) == steps:
+        state, _, _ = ckpt.restore(TINY_DIR, steps)
+        return model, state["params"]
+    pipe = _pipeline()
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps,
+                                weight_decay=0.01)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        p2, o2, m = adamw.apply_updates(params, grads, opt, opt_cfg)
+        return p2, o2, loss
+
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, loss = step(params, opt, batch)
+        if i % 100 == 0:
+            print(f"[tiny_lm] step {i}: loss {float(loss):.3f}")
+    print(f"[tiny_lm] final loss {float(loss):.3f}")
+    ckpt.save(TINY_DIR, steps, {"params": params})
+    return model, params
+
+
+def perplexity(model: Model, params, n_batches: int = 8) -> float:
+    """exp(mean NLL) on held-out synthetic batches."""
+    pipe = _pipeline()
+    loss_fn = jax.jit(model.loss_fn)
+    tot = 0.0
+    for i in range(n_batches):
+        batch = {k: jnp.asarray(v)
+                 for k, v in pipe.batch_at(10_000 + i).items()}
+        tot += float(loss_fn(params, batch))
+    return float(np.exp(tot / n_batches))
+
+
+def bench(name: str, fn, *, n: int = 5, warmup: int = 1, derived="") -> str:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    us = (time.perf_counter() - t0) / n * 1e6
+    row = f"{name},{us:.1f},{derived}"
+    print(row)
+    return row
+
+
+def header(title: str):
+    print(f"\n### {title}")

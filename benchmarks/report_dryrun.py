@@ -1,0 +1,62 @@
+"""Render the dry-run result JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.report_dryrun [--dir benchmarks/results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(dir_):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def render(rows):
+    single = [r for r in rows if not r.get("multi_pod") and not r.get("skipped")]
+    multi = [r for r in rows if r.get("multi_pod") and not r.get("skipped")]
+    skipped = [r for r in rows if r.get("skipped")]
+
+    out = []
+    out.append("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+               "bound | roofline frac | useful FLOPs | mem GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        rf = r.get("roofline")
+        if not rf:
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | "
+                       f"{r['device_mem_gb']:.1f} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.2f} | {rf['bottleneck']} "
+            f"| {rf['roofline_fraction']:.3f} | {rf['useful_flops_ratio']:.3f} "
+            f"| {r['device_mem_gb']:.1f} |")
+    out.append("")
+    out.append(f"Multi-pod (2x16x16) compile proofs: "
+               f"{len(multi)} cells OK: " +
+               ", ".join(f"{r['arch']}/{r['shape']}" for r in multi))
+    if skipped:
+        out.append(f"\nSkipped cells (documented): " +
+                   ", ".join(f"{r['arch']}/{r['shape']}" for r in skipped))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+    print(render(load(args.dir)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Before/after comparison of two dry-run result directories.
+
+    PYTHONPATH=src python -m benchmarks.report_perf \
+        --base benchmarks/results/dryrun --opt benchmarks/results/dryrun_v2
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_):
+    out = {}
+    for f in glob.glob(os.path.join(dir_, "*__single.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("skipped") or "roofline" not in r:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="benchmarks/results/dryrun")
+    ap.add_argument("--opt", default="benchmarks/results/dryrun_v2")
+    args = ap.parse_args()
+    base, opt = load(args.base), load(args.opt)
+
+    print("| arch | shape | t_bound base→opt (ms) | × | bound base→opt | "
+          "mem GiB base→opt |")
+    print("|---|---|---|---|---|---|")
+    total_speedup = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        rb, ro = base[key]["roofline"], opt[key]["roofline"]
+        tb = max(rb["t_compute_s"], rb["t_memory_s"], rb["t_collective_s"])
+        to = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        x = tb / max(to, 1e-12)
+        total_speedup.append(x)
+        print(f"| {key[0]} | {key[1]} | {tb*1e3:.1f} → {to*1e3:.1f} "
+              f"| {x:.1f}× | {rb['bottleneck']} → {ro['bottleneck']} "
+              f"| {base[key]['device_mem_gb']:.1f} → "
+              f"{opt[key]['device_mem_gb']:.1f} |")
+    if total_speedup:
+        import math
+        geo = math.exp(sum(math.log(x) for x in total_speedup)
+                       / len(total_speedup))
+        print(f"\ngeomean bound-term speedup: {geo:.2f}× over "
+              f"{len(total_speedup)} cells")
+
+
+if __name__ == "__main__":
+    main()

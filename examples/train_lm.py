@@ -1,0 +1,64 @@
+"""End-to-end training driver with fault tolerance.
+
+Default preset trains a small LM for a few hundred steps on CPU with
+checkpoint/restart enabled; ``--preset 100m`` is the ~100M-parameter
+configuration for a real accelerator (same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --inject-failure 120
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainConfig
+
+PRESETS = {
+    # ~3M params: a-few-minutes CPU run
+    "tiny": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+                 head_dim=32, d_ff=1024, vocab_size=2048, max_seq_len=256),
+    # ~100M params: real-accelerator scale, same code path
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 head_dim=64, d_ff=3072, vocab_size=32768, max_seq_len=1024),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=None,
+                    help="simulate a node failure at this step (recovery demo)")
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced("opt_6_7b").replace(remat=False, scan_layers=False,
+                                          **PRESETS[args.preset])
+    model = Model(cfg)
+    print(f"[train_lm] {cfg.name} preset={args.preset}: "
+          f"{model.n_params():,} params")
+
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                       global_batch=args.batch, seed=0)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=50,
+                       ckpt_dir=args.ckpt_dir, log_every=20,
+                       grad_compression=args.grad_compression)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                             total_steps=args.steps, weight_decay=0.01)
+    trainer = Trainer(model, ocfg, tcfg)
+    state, hist = trainer.run(pipe, inject_failure_at=args.inject_failure)
+    print(f"[train_lm] done: step {int(state['step'])}, "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

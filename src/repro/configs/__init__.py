@@ -1,0 +1,5 @@
+from repro.configs.base import (ModelConfig, ShapeCfg, SHAPES, ARCH_IDS,
+                                get_config, get_reduced, registry)
+
+__all__ = ["ModelConfig", "ShapeCfg", "SHAPES", "ARCH_IDS", "get_config",
+           "get_reduced", "registry"]

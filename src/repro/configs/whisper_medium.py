@@ -1,0 +1,37 @@
+"""whisper-medium [audio] — encoder-decoder transformer backbone.
+
+24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865 — enc-dec, conv
+frontend (stub)  [arXiv:2212.04356; unverified]
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, 1500, d_model) to the encoder.
+Being an encoder-DECODER, decode shapes run (serve_step over the decoder
+with cross-attention); long_500k is skipped (full attention).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,                 # decoder layers
+    n_encoder_layers=24,
+    encoder_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    attention="gqa",
+    pos="learned",
+    mlp_act="gelu",
+    norm="layernorm",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, n_encoder_layers=2, encoder_seq=16, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        scan_layers=False, max_seq_len=128,
+    )

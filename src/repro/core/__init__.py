@@ -1,0 +1,11 @@
+"""FIGLUT core: BCQ weight format, LUT-based FP-INT GEMM, energy model."""
+from repro.core.bcq import (BCQWeight, quantize, from_uniform, dequantize,
+                            pack_planes, unpack_planes, packed_nbytes)
+from repro.core.lut_gemm import bcq_apply, bcq_xla_matmul, Backend
+from repro.core.quantized_linear import linear_apply, quantize_linear
+
+__all__ = [
+    "BCQWeight", "quantize", "from_uniform", "dequantize", "pack_planes",
+    "unpack_planes", "packed_nbytes", "bcq_apply", "bcq_xla_matmul",
+    "Backend", "linear_apply", "quantize_linear",
+]

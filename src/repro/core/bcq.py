@@ -1,0 +1,330 @@
+"""Binary-coding quantization (BCQ) — the weight format FIGLUT executes.
+
+A real-valued weight w is approximated as
+
+    w  ≈  sum_{i=1}^{q} alpha_i * b_i  +  z ,     b_i in {-1, +1}
+
+(paper Eq. (1)/(3)).  The binary planes ``B_i`` are what the accelerator
+streams bit-serially; ``alpha`` and the offset ``z`` are per-output-row
+(optionally per input-group) FP scaling terms.
+
+This module provides:
+
+  * ``quantize``            — greedy + alternating-refinement BCQ solver
+  * ``from_uniform``        — exact RTN-uniform -> BCQ(+offset) conversion
+                              (paper Fig. 1 / Eq. (3), after [28])
+  * ``dequantize``          — reference reconstruction
+  * ``pack_planes`` / ``unpack_planes`` — uint8 bit-plane packing (8 binary
+                              weights per byte per plane) — the storage format
+                              whose HBM footprint the roofline credits
+  * ``BCQWeight``           — pytree container used by QuantizedLinear
+
+Shapes follow the GEMM convention of the paper: a weight matrix
+``W in R^{out, in}`` multiplies activations ``x in R^{in}``.  Scaling factors
+are per (out, group) where groups tile the *input* dimension (group size g,
+default 128 — the LUT-GEMM convention), so
+
+    W[m, n]  ≈  sum_i alpha[i, m, G(n)] * B[i, m, n]  +  z[m, G(n)]
+
+All solvers are pure JAX and jittable; they vectorize over rows and groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BCQWeight",
+    "quantize",
+    "from_uniform",
+    "dequantize",
+    "pack_planes",
+    "unpack_planes",
+    "packed_nbytes",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BCQWeight:
+    """BCQ-quantized weight tensor (pytree).
+
+    Attributes:
+      packed:   uint8[q, out, in//8]  bit-planes, 8 binary weights per byte
+                (LSB-first within the byte along the input dim).  Bit value 1
+                encodes b=+1, 0 encodes b=-1.
+      alpha:    f32[q, out, n_groups] per-plane scaling factors.
+      z:        f32[out, n_groups]    offset term (0 for pure BCQ).
+      group_size: static — input-dim group size for alpha/z.
+      in_features / out_features: static logical shape (pre-padding).
+    """
+
+    packed: jax.Array
+    alpha: jax.Array
+    z: jax.Array
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    in_features: int = dataclasses.field(metadata=dict(static=True))
+    out_features: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def bits(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n_groups(self) -> int:
+        return self.alpha.shape[-1]
+
+    def nbytes(self) -> int:
+        """Storage footprint in bytes (what HBM actually holds)."""
+        return (
+            self.packed.size * self.packed.dtype.itemsize
+            + self.alpha.size * self.alpha.dtype.itemsize
+            + self.z.size * self.z.dtype.itemsize
+        )
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+def pack_planes(planes: jax.Array) -> jax.Array:
+    """Pack {-1,+1} (or {0,1}) bit-planes into uint8, LSB-first.
+
+    planes: [q, out, in] with in % 8 == 0; values in {-1,+1} or {0,1}.
+    returns uint8[q, out, in//8].
+    """
+    q, out, n = planes.shape
+    if n % 8 != 0:
+        raise ValueError(f"input dim {n} not divisible by 8; pad first")
+    bits = (planes > 0).astype(jnp.uint8).reshape(q, out, n // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return (bits << shifts).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_planes(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_planes`; returns ±1 planes [q, out, in]."""
+    q, out, nb = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)  # [q, out, nb, 8]
+    pm1 = bits.astype(dtype) * 2 - 1
+    return pm1.reshape(q, out, nb * 8)
+
+
+def packed_nbytes(out_features: int, in_features: int, bits: int,
+                  group_size: int = 128, alpha_bytes: int = 4) -> int:
+    """Analytic storage of a BCQ weight (used by the energy/roofline models)."""
+    n_groups = -(-in_features // group_size)
+    return (bits * out_features * in_features) // 8 + \
+        alpha_bytes * out_features * n_groups * (bits + 1)
+
+
+# ---------------------------------------------------------------------------
+# dequantize (reference reconstruction)
+# ---------------------------------------------------------------------------
+
+
+def dequantize(w: BCQWeight, dtype=jnp.float32) -> jax.Array:
+    """Reconstruct the dense weight matrix W[out, in] from BCQ form.
+
+    Written as one elementwise chain (unpack -> scale -> reduce over q)
+    so XLA can fuse it into a single kernel whose HBM traffic is the
+    packed bytes in + the dense matrix out — the plane tensors stay in
+    registers on a fusing backend.  Pass dtype=bf16 on the serve path:
+    an f32 dense intermediate doubles the dominant weight-byte term.
+    """
+    q, out, nb = w.packed.shape
+    in_pad = nb * 8
+    g = w.group_size
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (w.packed[..., None] >> shifts) & jnp.uint8(1)       # [q,out,nb,8]
+    pm1 = bits.astype(jnp.float32) * 2 - 1
+    alpha_cols = jnp.repeat(w.alpha, g, axis=-1)                # [q,out,in_pad]
+    z_cols = jnp.repeat(w.z, g, axis=-1)                        # [out,in_pad]
+    dense = (pm1.reshape(q, out, in_pad) * alpha_cols).sum(0) + z_cols
+    return dense[:, : w.in_features].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# uniform (RTN) -> BCQ with offset       (paper Fig. 1, after LUT-GEMM [28])
+# ---------------------------------------------------------------------------
+
+
+def from_uniform(w_dense: jax.Array, bits: int, group_size: int = 128) -> BCQWeight:
+    """Exact mapping of round-to-nearest uniform quantization into BCQ form.
+
+    RTN:   w ≈ s * (n - z0),  n ∈ {0..2^q-1},  s/z0 per (row, group)
+    BCQ:   alpha_i = s * 2^{i-1},   z = s * ((2^q - 1)/2 - z0)
+
+    so that sum_i alpha_i b_i + z reproduces every uniform level exactly
+    (b_i = 2*bit_i(n) - 1).  This is what lets the fixed BCQ engine execute
+    ordinary uniformly-quantized checkpoints (OPTQ/AWQ/RTN).
+    """
+    w = jnp.asarray(w_dense, jnp.float32)
+    out, n = w.shape
+    g = int(group_size)
+    n_pad = -(-n // g) * g
+    if n_pad != n:
+        w = jnp.pad(w, ((0, 0), (0, n_pad - n)), mode="edge")
+    n_groups = n_pad // g
+    wg = w.reshape(out, n_groups, g)
+
+    levels = (1 << bits) - 1
+    wmin = wg.min(axis=-1)
+    wmax = wg.max(axis=-1)
+    scale = jnp.maximum((wmax - wmin) / levels, 1e-12)   # s
+    z0 = -wmin / scale                                   # real-valued zero-point
+    code = jnp.clip(jnp.round((wg - wmin[..., None]) / scale[..., None]), 0, levels)
+
+    # bit-planes of the code, LSB = plane 0
+    planes = []
+    for i in range(bits):
+        bit = (code.astype(jnp.int32) >> i) & 1
+        planes.append((bit * 2 - 1).astype(jnp.float32))
+    planes = jnp.stack(planes)                     # [q, out, n_groups, g] in {-1,1}
+    planes = planes.reshape(bits, out, n_pad)
+
+    pow2 = (2.0 ** jnp.arange(bits, dtype=jnp.float32)) / 2.0   # 2^{i-1}
+    alpha = scale[None, :, :] * pow2[:, None, None]              # [q, out, G]
+    z = scale * ((levels / 2.0) - z0)                            # [out, G]
+    # reconstruct offset: w = s*(n - z0); n = sum 2^i bit_i = sum 2^{i-1}(b_i+1)
+    #   => w = sum s 2^{i-1} b_i + s(sum 2^{i-1} - z0) = sum alpha_i b_i + s((2^q-1)/2 - z0)
+    return BCQWeight(
+        packed=pack_planes(planes),
+        alpha=alpha.astype(jnp.float32),
+        z=z.astype(jnp.float32),
+        group_size=g,
+        in_features=n,
+        out_features=out,
+    )
+
+
+# ---------------------------------------------------------------------------
+# BCQ solver: greedy init + alternating refinement   (Eq. (1), after [33])
+# ---------------------------------------------------------------------------
+
+
+def _greedy_init(wg: jax.Array, bits: int):
+    """Greedy BCQ (Xu et al.): repeatedly fit sign/mean-abs to the residual.
+
+    wg: [out, G, g] grouped weights. Returns planes [q,out,G,g] in {-1,1},
+    alpha [q,out,G].
+    """
+    r = wg
+    planes, alphas = [], []
+    for _ in range(bits):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=-1)          # [out, G]
+        planes.append(b)
+        alphas.append(a)
+        r = r - a[..., None] * b
+    return jnp.stack(planes), jnp.stack(alphas)
+
+
+def _ls_alpha(wg: jax.Array, planes: jax.Array, with_offset: bool):
+    """Least-squares refit of (alpha_1..alpha_q[, z]) given binary planes.
+
+    Solves  min || w - A c ||  where A = [b_1 .. b_q (, 1)] per (out, G) row.
+    Uses the qxq normal equations (q <= 8 so this is tiny).
+    planes: [q, out, G, g];  wg: [out, G, g].
+    Returns alpha [q, out, G], z [out, G].
+    """
+    q = planes.shape[0]
+    cols = planes
+    if with_offset:
+        ones = jnp.ones_like(planes[:1])
+        cols = jnp.concatenate([planes, ones], axis=0)    # [q+1, out, G, g]
+    k = cols.shape[0]
+    # normal matrix  M[i,j] = <col_i, col_j>  per (out, G)
+    M = jnp.einsum("iogn,jogn->ogij", cols, cols)          # [out, G, k, k]
+    v = jnp.einsum("iogn,ogn->ogi", cols, wg)              # [out, G, k]
+    # Tikhonov-regularize: binary columns CAN be exactly collinear (a greedy
+    # plane that comes out constant duplicates the offset column), which makes
+    # M singular.  Diagonal entries are exactly g, so scale the ridge with g.
+    g = wg.shape[-1]
+    M = M + (1e-3 * g) * jnp.eye(k, dtype=M.dtype)
+    c = jnp.linalg.solve(M, v[..., None])[..., 0]          # [out, G, k]
+    alpha = jnp.moveaxis(c[..., :q], -1, 0)                # [q, out, G]
+    z = c[..., q] if with_offset else jnp.zeros_like(v[..., 0])
+    return alpha, z
+
+
+def _reassign_planes(wg: jax.Array, alpha: jax.Array, z: jax.Array, bits: int):
+    """Optimal binary plane re-assignment for fixed alpha/z.
+
+    Each scalar weight independently picks the codeword
+    c(p) = sum_i alpha_i * (+-1 per bit of p) + z  closest to it — a 2^q-entry
+    nearest-codebook search (q <= 8 -> at most 256 candidates, vectorized).
+    """
+    q = bits
+    n_codes = 1 << q
+    codes = jnp.arange(n_codes)
+    # signs[p, i] = +1 if bit i of p else -1
+    signs = ((codes[:, None] >> jnp.arange(q)[None, :]) & 1) * 2.0 - 1.0  # [P, q]
+    # codeword values per (out, G): [out, G, P]
+    vals = jnp.einsum("pi,iog->ogp", signs, alpha) + z[..., None]
+    # nearest code per element: wg [out, G, g] vs vals [out, G, P]
+    idx = jnp.argmin(
+        jnp.abs(wg[..., None] - vals[..., None, :]), axis=-1
+    )  # [out, G, g]
+    bit = (idx[None, ...] >> jnp.arange(q)[:, None, None, None]) & 1
+    return bit.astype(jnp.float32) * 2 - 1                 # [q, out, G, g]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "iters", "with_offset"))
+def _quantize_impl(w: jax.Array, bits: int, group_size: int, iters: int,
+                   with_offset: bool):
+    out, n = w.shape
+    g = group_size
+    n_pad = -(-n // g) * g
+    pad = n_pad - n
+    if pad:
+        # pad with edge replication so padded cols don't skew alpha; they are
+        # masked out of the LS fits below via weighting = simply repeat values.
+        w = jnp.pad(w, ((0, 0), (0, pad)), mode="edge")
+    n_groups = n_pad // g
+    wg = w.reshape(out, n_groups, g)
+
+    planes, alpha = _greedy_init(wg, bits)
+    z = jnp.zeros((out, n_groups), w.dtype)
+    for _ in range(iters):
+        alpha, z_new = _ls_alpha(wg, planes, with_offset)
+        z = z_new if with_offset else z
+        # keep alpha positive & planes canonical (sign absorbed into planes)
+        sign = jnp.where(alpha < 0, -1.0, 1.0)
+        alpha = alpha * sign
+        planes = planes * sign[..., None]
+        planes = _reassign_planes(wg, alpha, z, bits)
+    alpha, z_new = _ls_alpha(wg, planes, with_offset)
+    z = z_new if with_offset else z
+    sign = jnp.where(alpha < 0, -1.0, 1.0)
+    alpha, planes = alpha * sign, planes * sign[..., None]
+
+    planes = planes.reshape(bits, out, n_pad)
+    return pack_planes(planes), alpha.astype(jnp.float32), z.astype(jnp.float32)
+
+
+def quantize(w_dense: jax.Array, bits: int, group_size: int = 128,
+             iters: int = 5, with_offset: bool = True) -> BCQWeight:
+    """BCQ-quantize a dense weight matrix.
+
+    Greedy init + ``iters`` rounds of (alpha,z) least squares <-> binary
+    nearest-codebook reassignment (alternating minimization of Eq. (1)).
+
+    with_offset=True yields the extended BCQ of Eq. (3) that subsumes
+    uniform quantization; False gives classic zero-offset BCQ.
+    """
+    w = jnp.asarray(w_dense, jnp.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got {w.shape}")
+    packed, alpha, z = _quantize_impl(w, int(bits), int(group_size), int(iters),
+                                      bool(with_offset))
+    return BCQWeight(
+        packed=packed, alpha=alpha, z=z, group_size=int(group_size),
+        in_features=w.shape[1], out_features=w.shape[0],
+    )

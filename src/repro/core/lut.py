@@ -1,0 +1,156 @@
+"""LUT construction & keying for LUT-based FP-INT GEMM (paper §III-A/D/E).
+
+Given activations ``x`` split into groups of ``mu`` consecutive elements, the
+LUT for group ``G`` holds every signed combination
+
+    LUT[G, p] = sum_{j<mu} sign_j(p) * x[G*mu + j],   sign_j(p) = +1 if bit j
+                of p is set else -1,   p in [0, 2^mu)
+
+so a weight row's contribution over the group is ONE read keyed by its mu-bit
+pattern (the RAC operation).  Key layout matches `bcq.pack_planes`: bit j of
+the key corresponds to input ``G*mu + j`` (LSB-first).
+
+hFFLUT (§III-D): LUT is odd-symmetric, ``LUT[p] = -LUT[2^mu-1-p]`` (flipping
+every sign bit negates the sum).  We store only the MSB=1 half and decode
+
+    value(p) = msb(p) ? half[p - 2^(mu-1)] : -half[(2^mu-1-p) - 2^(mu-1)]
+
+The LUT *generator* (§III-E) builds all entries with a 2-step tree that
+shares low-half partial sums; `generator_adder_count` reports its adder cost
+(14 adds for mu=4 vs 24 naive -> the paper's "42% fewer" claim) and feeds the
+energy model / bench_fig11.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "sign_matrix",
+    "build_lut",
+    "build_half_lut",
+    "decode_half_lut",
+    "extract_keys",
+    "keys_from_packed",
+    "generator_adder_count",
+    "naive_adder_count",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _sign_matrix_np(mu: int) -> np.ndarray:
+    p = np.arange(1 << mu)
+    bits = (p[:, None] >> np.arange(mu)[None, :]) & 1
+    return (bits * 2 - 1).astype(np.float32)  # [2^mu, mu]
+
+
+def sign_matrix(mu: int, dtype=jnp.float32) -> jax.Array:
+    """S[p, j] = +-1 per bit j of p — LUT build is ``x_groups @ S.T``."""
+    return jnp.asarray(_sign_matrix_np(mu), dtype)
+
+
+def build_lut(x: jax.Array, mu: int) -> jax.Array:
+    """Build full LUTs for activations x.
+
+    x: [..., N] with N % mu == 0 (pad upstream). Returns [..., N//mu, 2^mu]
+    where out[..., g, p] = sum_j sign_j(p) * x[..., g*mu + j].
+
+    The contraction is a (G, mu) @ (mu, 2^mu) matmul — on TPU this runs on
+    the MXU and is the systolic analogue of the paper's adder-tree generator.
+    """
+    n = x.shape[-1]
+    if n % mu:
+        raise ValueError(f"N={n} not divisible by mu={mu}")
+    groups = x.reshape(*x.shape[:-1], n // mu, mu)
+    s = sign_matrix(mu, x.dtype)
+    return groups @ s.T                                  # [..., G, 2^mu]
+
+
+def build_half_lut(x: jax.Array, mu: int) -> jax.Array:
+    """hFFLUT: only the MSB=1 half of the table, [..., G, 2^(mu-1)].
+
+    half[..., g, h] = LUT[..., g, h + 2^(mu-1)]  = x_hi + combo(x_lo..)
+    Built directly from the half sign matrix (the generator tree computes
+    exactly these rows, reusing low-bit partials — §III-E).
+    """
+    n = x.shape[-1]
+    groups = x.reshape(*x.shape[:-1], n // mu, mu)
+    s = sign_matrix(mu, x.dtype)[(1 << (mu - 1)):]       # MSB=1 rows
+    return groups @ s.T                                  # [..., G, 2^(mu-1)]
+
+
+def decode_half_lut(half: jax.Array, keys: jax.Array, mu: int) -> jax.Array:
+    """Read values from an hFFLUT (paper Fig. 10 decoder).
+
+    half: [..., G, 2^(mu-1)]; keys: int[..., G] in [0, 2^mu).
+    value = msb ? half[key - H] : -half[(2^mu-1-key) - H],  H = 2^(mu-1).
+    """
+    hsz = 1 << (mu - 1)
+    msb = keys >= hsz
+    idx = jnp.where(msb, keys - hsz, (2 * hsz - 1 - keys) - hsz + hsz)
+    # note: 2^mu-1-key for key<H lands in [H, 2^mu) -> subtract H:
+    idx = jnp.where(msb, keys - hsz, hsz - 1 - keys)
+    vals = jnp.take_along_axis(half, idx[..., None], axis=-1)[..., 0]
+    return jnp.where(msb, vals, -vals)
+
+
+def extract_keys(planes_pm1: jax.Array, mu: int) -> jax.Array:
+    """Keys from +-1 planes: [q, out, N] -> int32 [q, out, N//mu]."""
+    q, out, n = planes_pm1.shape
+    bits = (planes_pm1 > 0).astype(jnp.int32).reshape(q, out, n // mu, mu)
+    return (bits << jnp.arange(mu, dtype=jnp.int32)).sum(-1)
+
+
+def keys_from_packed(packed: jax.Array, mu: int) -> jax.Array:
+    """Extract mu-bit LUT keys directly from uint8-packed planes.
+
+    packed: uint8[q, out, N//8]; requires 8 % mu == 0 (mu in {1,2,4,8}).
+    Returns int32[q, out, N//mu]; key bit j <-> input g*mu+j (LSB-first),
+    consistent with `bcq.pack_planes` and `build_lut`.
+    """
+    if 8 % mu:
+        raise ValueError(f"mu={mu} must divide 8 for byte-packed keys")
+    per_byte = 8 // mu
+    q, out, nb = packed.shape
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint8) * mu)
+    mask = jnp.uint8((1 << mu) - 1)
+    keys = (packed[..., None] >> shifts) & mask          # [q, out, nb, per_byte]
+    return keys.reshape(q, out, nb * per_byte).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# generator cost model (paper §III-E / Fig. 11)
+# ---------------------------------------------------------------------------
+
+
+def naive_adder_count(mu: int, half: bool = True) -> int:
+    """Adds to build each LUT entry independently: (mu-1) per entry."""
+    entries = 1 << (mu - 1) if half else 1 << mu
+    return entries * (mu - 1)
+
+
+def generator_adder_count(mu: int, half: bool = True) -> int:
+    """Adds for the two-step tree generator of §III-E.
+
+    Split the mu inputs into hi = ceil(mu/2), lo = floor(mu/2) bits.  All
+    signed combos of the lo part (2^lo entries, built with a 1-add tree each
+    beyond the first bit) are shared across hi patterns; hi combos likewise
+    computed once; each final entry is then hi_combo + lo_combo (1 add).
+
+    For mu=4, half=True: lo combos = 4 entries x 1 add = 4; hi combos with
+    MSB fixed (+) = 2 entries x 1 add = 2; 8 final entries x 1 add = 8;
+    total = 14 — matches the paper ("14 additions", 42% less than 24).
+    """
+    lo = mu // 2
+    hi = mu - lo
+    lo_adds = (1 << lo) * (lo - 1) if lo > 1 else 0
+    if half:
+        hi_patterns = 1 << (hi - 1)          # MSB fixed to +
+    else:
+        hi_patterns = 1 << hi
+    hi_adds = hi_patterns * (hi - 1) if hi > 1 else 0
+    final = (1 << (mu - 1) if half else 1 << mu) * 1
+    return lo_adds + hi_adds + final

@@ -1,0 +1,100 @@
+"""Sensitivity-based mixed-precision bit allocation (ShiftAddLLM-style).
+
+The paper's Fig. 17 evaluates FIGLUT under *mixed-precision* BCQ (e.g.
+average 2.4 bits): each layer gets its own bit-width chosen by sensitivity,
+and the bit-serial engine executes whatever q each layer carries.
+
+We implement the standard greedy marginal-gain allocator:
+
+  1. for every weight matrix, measure BCQ reconstruction error at each
+     candidate bit-width (output-MSE proxy: ||(W - W_q) . x_cal||^2 when a
+     calibration batch is supplied, else Frobenius weight MSE);
+  2. start every layer at min(bits); repeatedly upgrade the layer with the
+     best error-reduction per additional stored bit until the parameter-
+     weighted average bit budget is exhausted.
+
+Returns {name: bits}; ``quantize_mixed`` applies it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcq as bcq_mod
+
+
+def layer_sensitivity(w: jax.Array, bits: int, group_size: int = 128,
+                      x_cal: Optional[jax.Array] = None, iters: int = 3) -> float:
+    """Quantization error of one layer at one bit-width."""
+    wq = bcq_mod.quantize(w, bits=bits, group_size=group_size, iters=iters)
+    err = bcq_mod.dequantize(wq) - w
+    if x_cal is not None:
+        out = jnp.einsum("...n,mn->...m", x_cal.astype(jnp.float32), err)
+        return float(jnp.mean(out * out))
+    return float(jnp.mean(err * err))
+
+
+def allocate_bits(weights: Mapping[str, jax.Array], target_avg_bits: float,
+                  candidates: Sequence[int] = (2, 3, 4),
+                  group_size: int = 128,
+                  x_cal: Optional[Mapping[str, jax.Array]] = None,
+                  sensitivity_fn: Callable = layer_sensitivity) -> dict:
+    """Greedy marginal-gain mixed-precision allocation.
+
+    target_avg_bits is parameter-weighted; returns {name: bits}.
+    """
+    candidates = sorted(candidates)
+    names = list(weights)
+    sizes = {k: int(np.prod(weights[k].shape)) for k in names}
+    total = sum(sizes.values())
+
+    err = {
+        k: {b: sensitivity_fn(weights[k], b, group_size,
+                              None if x_cal is None else x_cal.get(k))
+            for b in candidates}
+        for k in names
+    }
+
+    bits = {k: candidates[0] for k in names}
+    budget = target_avg_bits * total
+
+    def used() -> float:
+        return sum(bits[k] * sizes[k] for k in names)
+
+    while True:
+        best, best_gain = None, 0.0
+        for k in names:
+            cur = bits[k]
+            nxt = next((b for b in candidates if b > cur), None)
+            if nxt is None:
+                continue
+            extra = (nxt - cur) * sizes[k]
+            if used() + extra > budget + 1e-9:
+                continue
+            gain = (err[k][cur] - err[k][nxt]) / extra
+            if gain > best_gain:
+                best, best_gain = (k, nxt), gain
+        if best is None:
+            break
+        bits[best[0]] = best[1]
+    return bits
+
+
+def quantize_mixed(weights: Mapping[str, jax.Array], bit_map: Mapping[str, int],
+                   group_size: int = 128, iters: int = 5) -> dict:
+    """Apply a mixed-precision plan; returns {name: BCQWeight}."""
+    return {
+        k: bcq_mod.quantize(w, bits=bit_map[k], group_size=group_size,
+                            iters=iters)
+        for k, w in weights.items()
+    }
+
+
+def average_bits(bit_map: Mapping[str, int],
+                 weights: Mapping[str, jax.Array]) -> float:
+    sizes = {k: int(np.prod(weights[k].shape)) for k in weights}
+    total = sum(sizes.values())
+    return sum(bit_map[k] * sizes[k] for k in weights) / total

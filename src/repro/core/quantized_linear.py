@@ -1,0 +1,59 @@
+"""QuantizedLinear — the drop-in linear layer executing BCQ weights.
+
+A linear's weight leaf is either a dense ``jax.Array`` (training /
+unquantized) or a :class:`~repro.core.bcq.BCQWeight` (post-PTQ serving).
+``linear_apply`` dispatches transparently, so model code never branches on
+quantization state; the execution backend (dense / bcq_xla / lut_pallas /
+mxu_pallas) is a config knob threaded through apply.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQWeight, quantize, from_uniform
+from repro.core.lut_gemm import Backend, bcq_apply
+
+
+_CAPTURE = None
+
+
+def set_capture(fn):
+    """Install a capture hook fn(w, x) called on every linear_apply —
+    used to collect per-layer calibration activations for OPTQ (eager
+    forward passes only; hooks see tracers under jit)."""
+    global _CAPTURE
+    _CAPTURE = fn
+
+
+def linear_apply(w, x: jax.Array, bias: Optional[jax.Array] = None,
+                 backend: Backend = "bcq_xla", out_dtype=None) -> jax.Array:
+    """y = x @ W^T (+ bias).  W is dense [out, in] or BCQWeight."""
+    if _CAPTURE is not None:
+        _CAPTURE(w, x)
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, BCQWeight):
+        y = bcq_apply(x, w, backend=backend, out_dtype=out_dtype)
+    else:
+        y = jnp.einsum("...n,mn->...m", x, w.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(out_dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def quantize_linear(w: jax.Array, bits: int, method: str = "bcq",
+                    group_size: int = 128, iters: int = 5) -> BCQWeight:
+    """Quantize one dense [out, in] weight.
+
+    method: "bcq" (alternating non-uniform, ShiftAddLLM-class) or
+            "rtn"/"uniform" (round-to-nearest mapped exactly into BCQ form —
+            what lets FIGLUT run uniformly-quantized checkpoints).
+    """
+    if method == "bcq":
+        return quantize(w, bits=bits, group_size=group_size, iters=iters)
+    if method in ("rtn", "uniform"):
+        return from_uniform(w, bits=bits, group_size=group_size)
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for FIGLUT.
+
+  lut_gemm    — paper-faithful LUT-based FP-INT GEMM (LUT build in VMEM +
+                keyed read-accumulate, hFFLUT symmetry; §III).
+  bcq_matmul  — beyond-paper TPU-native path: packed bit-planes dequantized
+                in VMEM + single MXU matmul per tile (DESIGN.md §2).
+
+Each kernel ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle swept against in tests).
+"""
+from .lut_gemm import lut_gemm
+from .bcq_matmul import bcq_matmul
+
+__all__ = ["lut_gemm", "bcq_matmul"]

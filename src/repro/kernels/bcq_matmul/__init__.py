@@ -1,0 +1,5 @@
+from .ops import bcq_matmul
+from .bcq_matmul import bcq_matmul_tiled
+from . import ref
+
+__all__ = ["bcq_matmul", "bcq_matmul_tiled", "ref"]

@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the BCQ dequant-in-VMEM matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQWeight
+from . import bcq_matmul as _k
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def bcq_matmul(x: jax.Array, w: BCQWeight, *, block_b: int = 8,
+               block_m: int = 128, block_n: int = 512,
+               interpret: bool = False, out_dtype=None) -> jax.Array:
+    """y = x @ dequant(w).T via the TPU-native packed-weight kernel."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    n_logical = x.shape[-1]
+    if n_logical != w.in_features:
+        raise ValueError(f"x last dim {n_logical} != in_features {w.in_features}")
+
+    x2 = x.reshape(-1, n_logical)
+    b = x2.shape[0]
+    q, m, _ = w.packed.shape
+    n_pad_w = w.packed.shape[-1] * 8
+    ag = w.alpha.shape[-1]
+
+    bp = _round_up(b, block_b)
+    block_n = min(block_n, _round_up(n_pad_w, w.group_size))
+    npad = _round_up(n_pad_w, block_n)
+    block_m = min(block_m, _round_up(m, 8))
+    mp = _round_up(m, block_m)
+    agp = npad // w.group_size
+
+    xp = jnp.zeros((bp, npad), x2.dtype).at[:b, :n_logical].set(x2)
+    packed, alpha, z = w.packed, w.alpha, w.z
+    if npad != n_pad_w or mp != m or agp != ag:
+        packed = jnp.zeros((q, mp, npad // 8), jnp.uint8).at[:, :m, : n_pad_w // 8].set(packed)
+        alpha = jnp.zeros((q, mp, agp), alpha.dtype).at[:, :m, :ag].set(alpha)
+        z = jnp.zeros((mp, agp), z.dtype).at[:m, :ag].set(z)
+
+    y = _k.bcq_matmul_tiled(
+        xp, packed, alpha, z, group_size=w.group_size, block_b=block_b,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+        out_dtype=jnp.float32)
+    return y[:b, :m].reshape(*lead, m).astype(out_dtype)

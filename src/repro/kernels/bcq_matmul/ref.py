@@ -1,0 +1,14 @@
+"""Oracle for bcq_matmul: dense dequantized matmul (FP32 accumulate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq as bcq_mod
+
+
+def bcq_matmul_ref(x: jax.Array, w: bcq_mod.BCQWeight, out_dtype=None) -> jax.Array:
+    dense = bcq_mod.dequantize(w, dtype=jnp.float32)
+    y = jnp.einsum("...n,mn->...m", x.astype(jnp.float32), dense,
+                   preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)

@@ -1,0 +1,5 @@
+from .ops import lut_gemm
+from .lut_gemm import lut_gemm_tiled
+from . import ref
+
+__all__ = ["lut_gemm", "lut_gemm_tiled", "ref"]

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel for FIGLUT's LUT-based FP-INT GEMM (paper §III).
+
+Per (batch-tile, out-tile, in-tile) grid cell:
+
+  1. **LUT generation** (§III-E): the activation tile x[TB, TN] is reshaped
+     into mu-groups and multiplied by the +-1 sign matrix — a (G, mu)x(mu, P)
+     matmul that runs on the MXU, the systolic analogue of the paper's
+     two-step adder tree.  With ``half_lut=True`` only the MSB=1 half of the
+     table is built (hFFLUT, §III-D).
+  2. **RAC** (§III-C): every output row's mu-bit weight pattern keys a read
+     from the VMEM-resident LUT.  VMEM has no banking at the Pallas
+     programming-model level, so k = TM concurrent readers are conflict-free
+     by construction — the software realization of the FFLUT+mux design.
+     Reads are implemented either as a 2^mu-way select sweep (``select``,
+     VPU, mirrors the paper's mux) or as a one-hot contraction (``onehot``,
+     MXU-friendly).
+  3. **bit-serial accumulate** (§III-B): plane value sums are grouped per
+     alpha-group, scaled by alpha_i, and accumulated in FP32; the offset term
+     z * sum(x_group) (Eq. (3)) is folded in once per tile.
+
+Storage streamed from HBM is the *packed* uint8 bit-planes — q/16 of the
+bf16 dense bytes — which is the memory-roofline win on TPU (DESIGN.md §2).
+
+Weight-stationary note: the grid iterates n (reduction) innermost and m
+before b, so a weight tile's packed planes stay resident while batch tiles
+stream — matching the paper's weight-stationary dataflow (§III-B) at the
+granularity Pallas exposes (block revisiting, not per-PE registers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ReadMode = Literal["select", "onehot", "gather"]
+
+
+def _sign_matrix(mu: int, half: bool, dtype):
+    """+-1 sign matrix built from 2-D iota (TPU requires >=2-D iota)."""
+    rows = (1 << (mu - 1)) if half else (1 << mu)
+    base = (1 << (mu - 1)) if half else 0
+    p = lax.broadcasted_iota(jnp.int32, (rows, mu), 0) + base
+    j = lax.broadcasted_iota(jnp.int32, (rows, mu), 1)
+    return (((p >> j) & 1) * 2 - 1).astype(dtype)
+
+
+def _extract_keys(packed_tile: jax.Array, mu: int) -> jax.Array:
+    """uint8[TM, TN//8] -> int32 keys [TM, TN//mu] (LSB-first, mu | 8)."""
+    tm, nb = packed_tile.shape
+    per_byte = 8 // mu
+    p32 = packed_tile.astype(jnp.int32)
+    cols = []
+    for s in range(per_byte):
+        cols.append((p32 >> (s * mu)) & ((1 << mu) - 1))
+    keys = jnp.stack(cols, axis=-1)                      # [TM, nb, per_byte]
+    return keys.reshape(tm, nb * per_byte)
+
+
+def _read_lut(lut: jax.Array, keys: jax.Array, mu: int, half: bool,
+              mode: ReadMode) -> jax.Array:
+    """vals[b, m, g] = LUT[b, g, key[m, g]]  (sign-decoded if half).
+
+    lut: [TB, G, P] (P = 2^mu or 2^(mu-1)); keys int32 [TM, G].
+    """
+    if half:
+        hsz = 1 << (mu - 1)
+        msb = keys >= hsz                                 # [TM, G]
+        idx = jnp.where(msb, keys - hsz, (hsz - 1) - keys)
+        sign = jnp.where(msb, 1.0, -1.0).astype(lut.dtype)
+        n_entries = hsz
+    else:
+        idx = keys
+        sign = None
+        n_entries = lut.shape[-1]
+
+    if mode == "select":
+        # 2^mu-way mux sweep — the RAC's multiplexer, vectorized over lanes.
+        acc = jnp.zeros((lut.shape[0], keys.shape[0], keys.shape[1]), lut.dtype)
+        for p in range(n_entries):
+            hit = (idx == p).astype(lut.dtype)            # [TM, G]
+            acc = acc + hit[None, :, :] * lut[:, None, :, p]
+        vals = acc
+    elif mode == "onehot":
+        onehot = (idx[..., None] ==
+                  lax.broadcasted_iota(jnp.int32, (*idx.shape, n_entries), 2)
+                  ).astype(lut.dtype)                     # [TM, G, P]
+        # contract P with G as batch: [G,TM,P] x [G,P,TB] -> [G,TM,TB]
+        vals = lax.dot_general(
+            onehot.transpose(1, 0, 2), lut.transpose(1, 2, 0),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).transpose(2, 1, 0)                              # [TB, TM, G]
+    elif mode == "gather":
+        tb, tm = lut.shape[0], idx.shape[0]
+        vals = jnp.take_along_axis(
+            jnp.broadcast_to(lut[:, None], (tb, tm, lut.shape[1], lut.shape[2])),
+            jnp.broadcast_to(idx[None, :, :, None], (tb, tm, idx.shape[1], 1)),
+            axis=-1,
+        )[..., 0]                                         # [TB, TM, G]
+    else:
+        raise ValueError(mode)
+
+    if half:
+        vals = vals * sign[None, :, :]
+    return vals
+
+
+def _lut_gemm_kernel(x_ref, packed_ref, alpha_ref, z_ref, o_ref, *,
+                     mu: int, half_lut: bool, group_size: int,
+                     read_mode: ReadMode, n_grid: int):
+    q = packed_ref.shape[0]
+    tb, tn = x_ref.shape
+    tm = packed_ref.shape[1]
+    tag = alpha_ref.shape[-1]
+    g = tn // mu
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # [TB, TN]
+
+    # -- 1. LUT generation (MXU): groups @ S^T ----------------------------
+    s = _sign_matrix(mu, half_lut, jnp.float32)           # [P, mu]
+    groups = x.reshape(tb * g, mu)
+    lut = lax.dot_general(groups, s,
+                          dimension_numbers=(((1,), (1,)), ((), ())),
+                          preferred_element_type=jnp.float32)
+    lut = lut.reshape(tb, g, -1)                          # [TB, G, P]
+
+    # -- 2/3. per-plane RAC + alpha accumulate ----------------------------
+    per_ag = group_size // mu
+    acc = jnp.zeros((tb, tm), jnp.float32)
+    for i in range(q):
+        keys = _extract_keys(packed_ref[i], mu)           # [TM, G]
+        vals = _read_lut(lut, keys, mu, half_lut, read_mode)   # [TB, TM, G]
+        vals_ag = vals.reshape(tb, tm, tag, per_ag).sum(-1)    # [TB, TM, AG]
+        alpha_i = alpha_ref[i].astype(jnp.float32)        # [TM, AG]
+        acc = acc + jnp.einsum("bma,ma->bm", vals_ag, alpha_i,
+                               preferred_element_type=jnp.float32)
+    # offset term  z[m,AG] * sum_G x   (Eq. (3))
+    xsum = x.reshape(tb, tag, group_size).sum(-1)         # [TB, AG]
+    acc = acc + jnp.einsum("ba,ma->bm", xsum, z_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mu", "half_lut", "group_size", "read_mode",
+                     "block_b", "block_m", "block_n", "interpret", "out_dtype"),
+)
+def lut_gemm_tiled(x, packed, alpha, z, *, mu: int = 4, half_lut: bool = True,
+                   group_size: int = 128, read_mode: ReadMode = "onehot",
+                   block_b: int = 8, block_m: int = 128, block_n: int = 512,
+                   interpret: bool = False, out_dtype=jnp.float32):
+    """Raw tiled kernel call. All dims must already divide the block sizes.
+
+    x: [B, N] fp; packed: uint8[q, M, N//8]; alpha: f32[q, M, N//group_size];
+    z: f32[M, N//group_size].  Returns [B, M] out_dtype (FP32 accumulation).
+    """
+    b, n = x.shape
+    q, m, _ = packed.shape
+    assert n % block_n == 0 and m % block_m == 0 and b % block_b == 0, (
+        f"shapes ({b},{m},{n}) must divide blocks ({block_b},{block_m},{block_n})")
+    assert block_n % group_size == 0 and group_size % mu == 0
+    tag = block_n // group_size
+    grid = (b // block_b, m // block_m, n // block_n)
+
+    kernel = functools.partial(
+        _lut_gemm_kernel, mu=mu, half_lut=half_lut, group_size=group_size,
+        read_mode=read_mode, n_grid=grid[2])
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda bi, mi, ni: (bi, ni)),
+            pl.BlockSpec((q, block_m, block_n // 8),
+                         lambda bi, mi, ni: (0, mi, ni)),
+            pl.BlockSpec((q, block_m, tag), lambda bi, mi, ni: (0, mi, ni)),
+            pl.BlockSpec((block_m, tag), lambda bi, mi, ni: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_m), lambda bi, mi, ni: (bi, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, m), out_dtype),
+        interpret=interpret,
+    )(x, packed, alpha, z)

@@ -1,0 +1,65 @@
+"""Public jit'd wrapper for the FIGLUT Pallas kernel.
+
+Handles arbitrary leading batch dims, pads (B, M, N) up to block multiples,
+and dispatches to :func:`lut_gemm_tiled`.  The oracle for every path is
+``ref.lut_ref`` / ``ref.dense_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQWeight
+from . import lut_gemm as _k
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4, half_lut: bool = True,
+             read_mode: str = "onehot", block_b: int = 8, block_m: int = 128,
+             block_n: int = 512, interpret: bool = False,
+             out_dtype=None) -> jax.Array:
+    """y = x @ dequant(w).T via the FIGLUT Pallas kernel.
+
+    x: [..., in_features] -> [..., out_features].  FP32 accumulation.
+    """
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    n_logical = x.shape[-1]
+    if n_logical != w.in_features:
+        raise ValueError(f"x last dim {n_logical} != in_features {w.in_features}")
+
+    x2 = x.reshape(-1, n_logical)
+    b = x2.shape[0]
+    n_pad_w = w.packed.shape[-1] * 8          # weight-side padded N (x8)
+    q, m, _ = w.packed.shape
+    ag = w.alpha.shape[-1]
+
+    # pad to block multiples
+    bp = _round_up(b, block_b)
+    block_n = min(block_n, _round_up(n_pad_w, w.group_size))
+    npad = _round_up(n_pad_w, block_n)
+    block_m = min(block_m, _round_up(m, 8))
+    mp = _round_up(m, block_m)
+    agp = npad // w.group_size
+
+    xp = jnp.zeros((bp, npad), x2.dtype).at[:b, :n_logical].set(x2)
+    packed = w.packed
+    alpha = w.alpha
+    z = w.z
+    if npad != n_pad_w or mp != m or agp != ag:
+        packed = jnp.zeros((q, mp, npad // 8), jnp.uint8).at[:, :m, : n_pad_w // 8].set(packed)
+        alpha = jnp.zeros((q, mp, agp), alpha.dtype).at[:, :m, :ag].set(alpha)
+        z = jnp.zeros((mp, agp), z.dtype).at[:m, :ag].set(z)
+
+    y = _k.lut_gemm_tiled(
+        xp, packed, alpha, z, mu=mu, half_lut=half_lut,
+        group_size=w.group_size, read_mode=read_mode, block_b=block_b,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+        out_dtype=jnp.float32,
+    )
+    return y[:b, :m].reshape(*lead, m).astype(out_dtype)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for LUT-based FP-INT GEMM (paper §III-A).
+
+Computes  y = x @ dequant(W).T  two ways:
+
+  * ``dense_ref``   — dequantize to dense FP and matmul (the "GPU engine"
+                      column of Table IV; ground truth).
+  * ``lut_ref``     — literally builds the LUTs and performs keyed
+                      read-accumulate per bit-plane (what the Pallas kernel
+                      must match bit-for-bit up to FP reassociation).
+
+Math:  with BCQ  W[m,n] = sum_i alpha[i,m,G(n)] B_i[m,n] + z[m,G(n)],
+
+  y[b,m] = sum_i sum_G alpha[i,m,G] * ( sum_{g in G} LUT_b[g, key_i[m,g]] )
+         + sum_G z[m,G] * S_b[G]
+
+where LUT_b[g,p] = sum_j sign_j(p) x[b, g*mu+j]  and  S_b[G] = sum_{n in G} x[b,n]
+(the offset term folds into a per-group activation sum — "accumulated sums
+summed with the offset value", §III-B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq as bcq_mod
+from repro.core import lut as lut_mod
+
+
+def dense_ref(x: jax.Array, w: bcq_mod.BCQWeight, out_dtype=None) -> jax.Array:
+    """Ground truth: dequantize then dense matmul (FP32 accumulate)."""
+    dense = bcq_mod.dequantize(w, dtype=jnp.float32)         # [out, in]
+    y = jnp.einsum("...n,mn->...m", x.astype(jnp.float32), dense,
+                   preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def lut_ref(x: jax.Array, w: bcq_mod.BCQWeight, mu: int = 4,
+            half_lut: bool = True, out_dtype=None) -> jax.Array:
+    """LUT-based evaluation — table build + read-accumulate, FP32 acc.
+
+    x: [..., in_features]. Returns [..., out_features].
+    """
+    if w.group_size % mu:
+        raise ValueError(f"group_size {w.group_size} must be divisible by mu={mu}")
+    xf = x.astype(jnp.float32)
+    n_pad = w.packed.shape[-1] * 8
+    if xf.shape[-1] != n_pad:                                 # zero-pad to match
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, n_pad - xf.shape[-1])])
+
+    lead = xf.shape[:-1]
+    xf2 = xf.reshape(-1, n_pad)                               # [B, N]
+    q = w.bits
+    keys = lut_mod.keys_from_packed(w.packed, mu)             # [q, M, N/mu]
+
+    if half_lut:
+        table = lut_mod.build_half_lut(xf2, mu)               # [B, G, 2^(mu-1)]
+        def read(keys_i):                                     # [M, G] -> [B, M, G]
+            return jax.vmap(
+                lambda t: lut_mod.decode_half_lut(t[None].repeat(keys_i.shape[0], 0), keys_i, mu)
+            )(table)
+    else:
+        table = lut_mod.build_lut(xf2, mu)                    # [B, G, 2^mu]
+        def read(keys_i):
+            def one_batch(t):                                 # t: [G, 2^mu]
+                return jnp.take_along_axis(t, keys_i.T, axis=-1).T  # [M, G]
+            return jax.vmap(one_batch)(table)
+
+    n_groups_mu = n_pad // mu
+    per_ag = w.group_size // mu                               # mu-groups per alpha-group
+    n_ag = w.n_groups
+
+    y = jnp.zeros((xf2.shape[0], w.out_features), jnp.float32)
+    for i in range(q):
+        vals = read(keys[i])                                  # [B, M, G_mu]
+        vals_ag = vals.reshape(*vals.shape[:-1], n_ag, per_ag).sum(-1)  # [B,M,AG]
+        y = y + jnp.einsum("bma,ma->bm", vals_ag, w.alpha[i])
+    # offset term: z[m,AG] * sum of x over the alpha-group
+    xsum_ag = xf2.reshape(xf2.shape[0], n_ag, w.group_size).sum(-1)     # [B, AG]
+    y = y + jnp.einsum("ba,ma->bm", xsum_ag, w.z)
+    return y.reshape(*lead, w.out_features).astype(out_dtype or x.dtype)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — required because the dry-run pins the device
+count via XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (single pod, 256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 0):
+    """Elastic helper: best (data, model) mesh for whatever devices exist.
+
+    Used after a failure/re-scale event: the checkpoint is topology-
+    agnostic, so training resumes on the largest divisor mesh.
+    """
+    if model_parallel <= 0:
+        model_parallel = min(16, n_devices)
+    while n_devices % model_parallel:
+        model_parallel //= 2
+    data = n_devices // model_parallel
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

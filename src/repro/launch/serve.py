@@ -1,0 +1,59 @@
+"""Production serving launcher: quantize (or load) and serve.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
+        --bits 3 --requests 16
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt_6_7b")
+    ap.add_argument("--reduced", type=int, default=1)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--method", default="bcq", choices=["bcq", "rtn"])
+    ap.add_argument("--backend", default="bcq_xla")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, get_reduced
+    from repro.models import Model
+    from repro.quantize import quantize_model
+    from repro.serve.engine import ServeEngine, Request
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, args.cache_len))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[launch.serve] {cfg.name}: {model.n_params():,} params")
+
+    if args.bits:
+        t0 = time.time()
+        params = quantize_model(params, model.axes(), bits=args.bits,
+                                method=args.method, group_size=64, iters=3)
+        print(f"[launch.serve] {args.method}-{args.bits}bit in "
+              f"{time.time()-t0:.1f}s")
+        model = Model(cfg.replace(gemm_backend=args.backend))
+
+    eng = ServeEngine(model, params, slots=args.slots,
+                      cache_len=args.cache_len, prefill_buckets=(16, 32, 64))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               (int(rng.integers(4, 24)),)),
+                    max_new_tokens=args.max_new) for i in range(args.requests)]
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"[launch.serve] {len(done)} requests, {toks} tokens, "
+          f"{toks/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi4_mini_3_8b \
+        --steps 1000 --global-batch 256 --seq-len 4096 [--devices N]
+
+On this CPU container the default runs a reduced config on 1 device; on a
+real TPU fleet the same entry point builds the production mesh and
+shards via the same rules the dry-run validates.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt_6_7b")
+    ap.add_argument("--reduced", type=int, default=1,
+                    help="1 = reduced config (CPU), 0 = full config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. '4x2' to build a data x model mesh")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, get_reduced
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import Model
+    from repro.optim import adamw
+    from repro.parallel import sharding as shd
+    from repro.train.trainer import Trainer, TrainConfig
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = Model(cfg)
+    print(f"[launch.train] {cfg.name}: {model.n_params():,} params")
+
+    mesh = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rules = shd.make_rules(fsdp=bool(args.fsdp), act_shard=True)
+        shd.set_activation_rules(mesh, rules)
+
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                       global_batch=args.global_batch, seed=0)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=50,
+                       ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches,
+                       grad_compression=args.grad_compression,
+                       fsdp=bool(args.fsdp))
+    ocfg = adamw.AdamWConfig(lr=3e-4, warmup_steps=min(100, args.steps // 10 + 1),
+                             total_steps=args.steps)
+    trainer = Trainer(model, ocfg, tcfg, mesh=mesh)
+    state, hist = trainer.run(pipe)
+    print(f"[launch.train] finished at step {int(state['step'])}, "
+          f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Composable pure-JAX model zoo (dense GQA / MLA / MoE / SSM / hybrid /
+enc-dec / stub-fronted VLM & audio), quantizable end-to-end via FIGLUT."""
+from repro.models.model import Model
+from repro.models.module import (ParamDesc, init_params, abstract_params,
+                                 logical_axes, param_count)
+
+__all__ = ["Model", "ParamDesc", "init_params", "abstract_params",
+           "logical_axes", "param_count"]

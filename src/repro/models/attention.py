@@ -1,0 +1,514 @@
+"""Attention: GQA / MLA / sliding-window, blockwise (flash-style) softmax,
+unified KV caches (full + ring-buffer), cross-attention.
+
+Memory design: prefill/train never materialize the full [Sq, Skv] score
+matrix — queries and keys are processed in chunks with online softmax
+(lax.scan over KV blocks inside a scan over Q blocks), so 32k-sequence
+cells fit.  An optional ``kv_map_fn`` decompresses latent (MLA) KV blocks
+inside the inner scan, keeping decompressed K/V transient.
+
+KV cache layout (GQA):  {k, v: [B, L, Hkv, D], pos: [B, L] int32}
+``pos`` holds the absolute position stored in each slot (-1 = empty); a
+ring buffer (sliding window) is just L = window with slot = pos % L —
+masking via ``pos`` makes full and ring caches the same code path.
+
+MLA cache: {ckv: [B, L, lora], krope: [B, L, rope_dim], pos: [B, L]} —
+the paper-exact compressed cache; decode uses the absorbed formulation
+(scores in latent space) so per-step cost is O(L * lora), not O(L * H * d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_linear import linear_apply
+from repro.models.layers import apply_rope
+from repro.models.module import ParamDesc
+from repro.parallel.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter descriptors
+# ---------------------------------------------------------------------------
+
+
+def attn_desc(cfg):
+    d = cfg.d_model
+    hd = cfg.head_dim_
+    if cfg.attention == "mla":
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p = {}
+        if cfg.q_lora_rank:
+            p["q_a"] = ParamDesc((cfg.q_lora_rank, d), jnp.bfloat16, ("lora", "embed"))
+            p["q_a_norm"] = ParamDesc((cfg.q_lora_rank,), jnp.float32, ("lora",), "ones")
+            p["q_b"] = ParamDesc((cfg.n_heads * qk_head, cfg.q_lora_rank),
+                                 jnp.bfloat16, ("heads", "lora"))
+        else:
+            p["q"] = ParamDesc((cfg.n_heads * qk_head, d), jnp.bfloat16,
+                               ("heads", "embed"))
+        p["kv_a"] = ParamDesc((cfg.kv_lora_rank + cfg.qk_rope_head_dim, d),
+                              jnp.bfloat16, ("lora", "embed"))
+        p["kv_a_norm"] = ParamDesc((cfg.kv_lora_rank,), jnp.float32, ("lora",), "ones")
+        p["kv_b"] = ParamDesc(
+            (cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), cfg.kv_lora_rank),
+            jnp.bfloat16, ("heads", "lora"))
+        p["o"] = ParamDesc((d, cfg.n_heads * cfg.v_head_dim), jnp.bfloat16,
+                           ("embed", "heads"))
+        return p
+    p = {
+        "q": ParamDesc((cfg.n_heads * hd, d), jnp.bfloat16, ("heads", "embed")),
+        "k": ParamDesc((cfg.n_kv_heads * hd, d), jnp.bfloat16, ("kv_heads", "embed")),
+        "v": ParamDesc((cfg.n_kv_heads * hd, d), jnp.bfloat16, ("kv_heads", "embed")),
+        "o": ParamDesc((d, cfg.n_heads * hd), jnp.bfloat16, ("embed", "heads")),
+    }
+    if cfg.qkv_bias:
+        p["q_b"] = ParamDesc((cfg.n_heads * hd,), jnp.float32, ("heads",), "zeros")
+        p["k_b"] = ParamDesc((cfg.n_kv_heads * hd,), jnp.float32, ("kv_heads",), "zeros")
+        p["v_b"] = ParamDesc((cfg.n_kv_heads * hd,), jnp.float32, ("kv_heads",), "zeros")
+    return p
+
+
+def cross_attn_desc(cfg):
+    """Whisper decoder cross-attention (K/V from encoder output)."""
+    return attn_desc(cfg)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention core
+# ---------------------------------------------------------------------------
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    """qpos [..., Sq, 1], kpos [..., 1, Sk] -> additive mask."""
+    ok = kpos >= 0
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= (qpos - kpos) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def blockwise_attention(q, k, v, qpos, kpos, *, causal=True, window=0,
+                        scale=None, q_chunk=512, kv_chunk=1024,
+                        kv_map_fn: Optional[Callable] = None):
+    """Online-softmax attention.
+
+    q: [B, Sq, H, Dq]; k: [B, Sk, Hkv, Dq] (or latent [B, Sk, *] with
+    kv_map_fn); v: [B, Sk, Hkv, Dv] (or None with kv_map_fn).
+    qpos: [B, Sq] absolute positions; kpos: [B, Sk] (-1 = empty slot).
+    kv_map_fn(k_blk, v_blk) -> (k [B,c,Hkv,Dq], v [B,c,Hkv,Dv]).
+    Returns [B, Sq, H, Dv] in q.dtype (FP32 accumulation).
+    """
+    b, sq, h, dq = q.shape
+    sk = k.shape[1]
+    if kv_map_fn is None:
+        kv_map_fn = lambda kb, vb: (kb, vb)
+        hkv = k.shape[2]
+        dv = v.shape[-1]
+    else:
+        kb0, vb0 = jax.eval_shape(kv_map_fn, k[:, :1], None if v is None else v[:, :1])
+        hkv, dv = kb0.shape[2], vb0.shape[-1]
+    rep = h // hkv
+    scale = scale if scale is not None else dq ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    sq_pad, sk_pad = nq * q_chunk, nk * kv_chunk
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, sq_pad - sq)))
+    if sk_pad != sk:
+        pad = [(0, 0), (0, sk_pad - sk)] + [(0, 0)] * (k.ndim - 2)
+        k = jnp.pad(k, pad)
+        if v is not None:
+            v = jnp.pad(v, [(0, 0), (0, sk_pad - sk)] + [(0, 0)] * (v.ndim - 2))
+        kpos = jnp.pad(kpos, ((0, 0), (0, sk_pad - sk)), constant_values=-1)
+
+    qc = q.reshape(b, nq, q_chunk, h, dq).transpose(1, 0, 2, 3, 4)
+    qposc = qpos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    kc = k.reshape(b, nk, kv_chunk, *k.shape[2:])
+    kc = jnp.moveaxis(kc, 1, 0)
+    vc = None
+    if v is not None:
+        vc = jnp.moveaxis(v.reshape(b, nk, kv_chunk, *v.shape[2:]), 1, 0)
+    kposc = jnp.moveaxis(kpos.reshape(b, nk, kv_chunk), 1, 0)
+
+    def q_block(qi, qpi):
+        # qi: [B, qc, H, Dq] -> grouped [B, qc, Hkv, rep, Dq].  Operands
+        # stay in their storage dtype (bf16 on TPU) with FP32 accumulation
+        # — the MXU-native mode; upcasting K/V blocks to f32 would double
+        # the cache-read bytes that dominate long-context cells.
+        qg = (qi.reshape(b, q_chunk, hkv, rep, dq)
+              .astype(jnp.float32) * scale).astype(qi.dtype)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, kpb = (inp if vc is not None else (inp[0], None, inp[1]))
+            kb, vb = kv_map_fn(kb, vb)
+            s = jnp.einsum("bqhrd,bkhd->bqhrk", qg, kb.astype(qg.dtype),
+                           preferred_element_type=jnp.float32)
+            # keep score blocks (and thus the autodiff residual stack built
+            # from them) sharded — GSPMD drops batch sharding on nested-scan
+            # residuals without this (observed 16 GiB vs 1 GiB per device)
+            s = shard_act(s, ("batch", None, "kv_heads", None, None))
+            s = s + _mask(qpi[:, :, None, None, None],
+                          kpb[:, None, None, None, :], causal, window)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhrk,bkhd->bqhrd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (jnp.zeros((b, q_chunk, hkv, rep, dv), jnp.float32),
+                jnp.full((b, q_chunk, hkv, rep), NEG_INF, jnp.float32),
+                jnp.zeros((b, q_chunk, hkv, rep), jnp.float32))
+        xs = (kc, vc, kposc) if vc is not None else (kc, kposc)
+        (acc, m, l), _ = jax.lax.scan(kv_step, init, xs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(b, q_chunk, h, dv)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (qc, qposc))
+
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq_pad, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def cache_desc_gqa(cfg, batch: int, length: int):
+    hd = cfg.head_dim_
+    hkv = cfg.n_kv_heads * cfg.kv_replication
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.sliding_window:
+        length = min(length, cfg.sliding_window)
+    c = {
+        "k": ParamDesc((batch, length, hkv, hd),
+                       jnp.int8 if cfg.kv_cache_bits == 8 else dt,
+                       ("batch", None, "kv_heads", "head_dim"), "zeros"),
+        "v": ParamDesc((batch, length, hkv, hd),
+                       jnp.int8 if cfg.kv_cache_bits == 8 else dt,
+                       ("batch", None, "kv_heads", "head_dim"), "zeros"),
+        "pos": ParamDesc((batch, length), jnp.int32, ("batch", None), "zeros"),
+    }
+    if cfg.kv_cache_bits == 8:
+        # symmetric per-(slot, head) scales
+        c["k_scale"] = ParamDesc((batch, length, hkv), jnp.float32,
+                                 ("batch", None, "kv_heads"), "zeros")
+        c["v_scale"] = ParamDesc((batch, length, hkv), jnp.float32,
+                                 ("batch", None, "kv_heads"), "zeros")
+    return c
+
+
+def _quantize_kv(t):
+    """bf16 [B,S,H,D] -> (int8 values, f32 per-(slot,head) scales)."""
+    tf = t.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(tf), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(tf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def cache_desc_mla(cfg, batch: int, length: int):
+    # the MLA latent has no heads dim to shard over the model axis, so the
+    # SEQUENCE dim is sharded instead ("kv_seq" -> model): decode attention
+    # over a sequence-sharded cache is a partial softmax + small all-reduce,
+    # vs 16x cache replication otherwise.
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ckv": ParamDesc((batch, length, cfg.kv_lora_rank), dt,
+                         ("batch", "kv_seq", "lora"), "zeros"),
+        "krope": ParamDesc((batch, length, cfg.qk_rope_head_dim), dt,
+                           ("batch", "kv_seq", None), "zeros"),
+        "pos": ParamDesc((batch, length), jnp.int32, ("batch", "kv_seq"),
+                         "zeros"),
+    }
+
+
+def empty_pos(pos_like):
+    return jnp.full_like(pos_like, -1)
+
+
+def cache_insert(cache: dict, updates: dict, at):
+    """Write S new entries starting at absolute position ``at``.
+
+    ``at`` is a scalar or per-row [B] vector (ragged continuous batching).
+    Slot convention: position p lives at slot p % L (ring semantics; a
+    full-length cache is the special case L >= max position).
+    ``updates`` maps cache keys -> [B, S, ...] new values.
+    """
+    b, length = cache["pos"].shape
+    s = next(iter(updates.values())).shape[1]
+    if s > length:
+        # writing more than the ring holds (SWA prefill > window): only the
+        # trailing `length` entries survive.
+        updates = {k: v[:, -length:] for k, v in updates.items()}
+        at = at + (s - length)
+        s = length
+    at = jnp.asarray(at, jnp.int32)
+    if at.ndim == 0:
+        at = jnp.broadcast_to(at, (b,))
+    positions = at[:, None] + jnp.arange(s, dtype=jnp.int32)[None]   # [B, S]
+    slots = positions % length
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+
+    new = dict(cache)
+    for key, val in updates.items():
+        new[key] = cache[key].at[bidx, slots].set(val.astype(cache[key].dtype))
+    new["pos"] = cache["pos"].at[bidx, slots].set(positions)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
+              causal=True, backend="dense"):
+    """GQA/MHA/SWA attention.
+
+    x: [B, S, d]; positions: [B, S].
+    cache=None          -> train/eval full-sequence attention.
+    cache + cache_at    -> write new KV at ``cache_at`` then attend to cache
+                           (prefill: S>1; decode: S=1). Returns (out, cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    q = _split_heads(linear_apply(params["q"], x, params.get("q_b"),
+                                  backend=backend), h, hd)
+    k = _split_heads(linear_apply(params["k"], x, params.get("k_b"),
+                                  backend=backend), hkv, hd)
+    v = _split_heads(linear_apply(params["v"], x, params.get("v_b"),
+                                  backend=backend), hkv, hd)
+    if cfg.kv_replication > 1:
+        # replicate kv heads so the cache shards over TP > n_kv_heads:
+        # q head i groups with effective kv head i // (H / (hkv*r))
+        k = jnp.repeat(k, cfg.kv_replication, axis=2)
+        v = jnp.repeat(v, cfg.kv_replication, axis=2)
+        hkv = hkv * cfg.kv_replication
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", None, "kv_heads", None))
+    v = shard_act(v, ("batch", None, "kv_heads", None))
+
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = blockwise_attention(q, k, v, positions, positions, causal=causal,
+                                  window=cfg.sliding_window)
+    elif cfg.kv_cache_bits == 8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = cache_insert(cache, {"k": kq, "v": vq,
+                                     "k_scale": ks, "v_scale": vs}, cache_at)
+        if s == 1:
+            out = decode_attend(q, cache, positions,
+                                window=cfg.sliding_window)
+        else:
+            # prefill: attend over the fresh bf16 K/V (the cache was empty,
+            # so causal/windowed attention over the prompt is equivalent) —
+            # quantization error then only affects subsequent decode reads
+            out = blockwise_attention(q, k, v, positions, positions,
+                                      causal=True, window=cfg.sliding_window)
+    elif s == 1:
+        # decode fast path: contract in cache layout, bf16 reads
+        cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
+        out = decode_attend(q, cache, positions, window=cfg.sliding_window)
+    else:
+        cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
+        out = blockwise_attention(q, cache["k"], cache["v"], positions,
+                                  cache["pos"], causal=True,
+                                  window=cfg.sliding_window)
+    out = out.reshape(b, s, h * hd)
+    out = linear_apply(params["o"], out, backend=backend)
+    return (out, cache) if cache is not None else out
+
+
+def decode_attend(q, cache, positions, *, window=0, scale=None):
+    """Single-token attention against a cache, in storage layout.
+
+    The generic blockwise path reshapes/transposes the whole cache into
+    chunk-major order and upcasts chunks to f32 — ~4 extra cache-sized
+    copies per layer that dominate the decode memory roofline.  Here the
+    contractions run directly on the [B, L, Hkv, D] buffers in bf16
+    (FP32 accumulation via preferred_element_type), no reshuffling.
+
+    q: [B, 1, H, D]; positions: [B, 1] absolute position of the token.
+    """
+    k, v, kpos = cache["k"], cache["v"], cache["pos"]
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    if k.dtype == jnp.int8:
+        # int8 KV: fold the per-slot scale into the score after an int8-read
+        # contraction (the dequant multiply fuses into the dot epilogue)
+        qg = (q.reshape(b, hkv, rep, d).astype(jnp.float32) * scale)
+        sc = jnp.einsum("bhrd,blhd->bhrl", qg.astype(jnp.bfloat16),
+                        k.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        sc = sc * cache["k_scale"].transpose(0, 2, 1)[:, :, None, :]
+        v_eff = v.astype(jnp.bfloat16)
+    else:
+        # scale in f32 THEN round to the storage dtype — identical rounding
+        # to the blockwise path so decode == forward to f32-accum noise
+        qg = (q.reshape(b, hkv, rep, d).astype(jnp.float32) * scale
+              ).astype(k.dtype)
+        sc = jnp.einsum("bhrd,blhd->bhrl", qg, k,
+                        preferred_element_type=jnp.float32)  # [B,Hkv,rep,L]
+        v_eff = v
+    # pin the (small) score sharding: when the cache shards head_dim over
+    # the model axis, GSPMD otherwise prefers ALL-GATHERING the whole KV
+    # cache per layer (~34 GB/step at 32k) over all-reducing these scores
+    sc = shard_act(sc, ("batch", "kv_heads", None, "kv_seq"))
+    ok = (kpos >= 0) & (kpos <= positions[:, :1])
+    if window:
+        ok &= (positions[:, :1] - kpos) < window
+    sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if k.dtype == jnp.int8:
+        p = p * cache["v_scale"].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bhrl,blhd->bhrd", p.astype(v_eff.dtype), v_eff,
+                     preferred_element_type=jnp.float32)
+    out = shard_act(out, ("batch", "kv_heads", None, "head_dim"))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def cross_kv(params, cfg, enc_out, backend="dense"):
+    """Project encoder output to cross-attention K/V (cached at prefill)."""
+    hd = cfg.head_dim_
+    hkv = cfg.n_kv_heads
+    k = _split_heads(linear_apply(params["k"], enc_out, params.get("k_b"),
+                                  backend=backend), hkv, hd)
+    v = _split_heads(linear_apply(params["v"], enc_out, params.get("v_b"),
+                                  backend=backend), hkv, hd)
+    return k, v
+
+
+def cross_attend(params, cfg, x, k, v, backend="dense"):
+    """Decoder cross-attention against (possibly cached) encoder K/V."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    h = cfg.n_heads
+    q = _split_heads(linear_apply(params["q"], x, params.get("q_b"),
+                                  backend=backend), h, hd)
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None],
+                            (b, k.shape[1]))
+    out = blockwise_attention(q, k, v, qpos, kpos, causal=False)
+    return linear_apply(params["o"], out.reshape(b, s, h * hd), backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention block (deepseek-v2 / minicpm3)
+# ---------------------------------------------------------------------------
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps) * scale
+    return y.astype(x.dtype)
+
+
+def mla_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
+              backend="dense"):
+    """Multi-head latent attention with compressed KV cache.
+
+    Prefill/train: decompress latent KV inside the blockwise scan.
+    Decode (S==1): absorbed formulation — scores/values in latent space.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    # --- queries -----------------------------------------------------
+    if cfg.q_lora_rank:
+        qa = linear_apply(params["q_a"], x, backend=backend)
+        qa = _rms(qa, params["q_a_norm"])
+        q = linear_apply(params["q_b"], qa, backend=backend)
+    else:
+        q = linear_apply(params["q"], x, backend=backend)
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed KV ------------------------------------------------
+    kv_a = linear_apply(params["kv_a"], x, backend=backend)   # [B,S,lora+dr]
+    ckv = _rms(kv_a[..., :lora], params["kv_a_norm"])
+    krope = apply_rope(kv_a[..., lora:][:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]            # shared head
+
+    w_kvb = params["kv_b"]
+    # split decompression weight into W_uk [H, dn, lora], W_uv [H, dv, lora]
+    from repro.core.bcq import BCQWeight, dequantize
+    w_dense = dequantize(w_kvb, jnp.float32) if isinstance(w_kvb, BCQWeight) \
+        else w_kvb.astype(jnp.float32)
+    w_kvb3 = w_dense.reshape(h, dn + dv, lora)
+    w_uk, w_uv = w_kvb3[:, :dn, :], w_kvb3[:, dn:, :]
+
+    if cache is not None:
+        cache = cache_insert(cache, {"ckv": ckv, "krope": krope}, cache_at)
+        ckv_all, krope_all, kpos = cache["ckv"], cache["krope"], cache["pos"]
+    else:
+        ckv_all, krope_all, kpos = ckv, krope, positions
+
+    if s == 1 and cache is not None:
+        # ---- absorbed decode: O(L * lora) per step -------------------
+        q_eff = jnp.einsum("bshn,hnl->bshl", q_nope.astype(jnp.float32), w_uk)
+        sc = jnp.einsum("bshl,bkl->bshk", q_eff, ckv_all.astype(jnp.float32))
+        sc = sc + jnp.einsum("bshr,bkr->bshk", q_rope.astype(jnp.float32),
+                             krope_all.astype(jnp.float32))
+        sc = sc * scale
+        # mask: slot occupied and slot position <= current decode position
+        m = (kpos >= 0)[:, None, None, :] & \
+            (kpos[:, None, None, :] <= positions[:, 0][:, None, None, None])
+        sc = jnp.where(m, sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bshk,bkl->bshl", p, ckv_all.astype(jnp.float32))
+        out = jnp.einsum("bshl,hvl->bshv", ctx, w_uv)          # [B,1,H,dv]
+    else:
+        # ---- prefill/train: decompress per KV block ------------------
+        def kv_map(latent_blk, _):
+            c, kr = latent_blk[..., :lora], latent_blk[..., lora:]
+            k_nope = jnp.einsum("bkl,hnl->bkhn", c.astype(jnp.float32), w_uk)
+            v_b = jnp.einsum("bkl,hvl->bkhv", c.astype(jnp.float32), w_uv)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr[:, :, None, :].astype(jnp.float32),
+                                          (*k_nope.shape[:2], h, dr))], axis=-1)
+            # keep f32: transient inside the KV-block scan; matches the
+            # absorbed decode path's precision
+            return k_full, v_b
+
+        latent = jnp.concatenate([ckv_all, krope_all], axis=-1)
+        # MLA stays f32-operand: the absorbed decode path reassociates the
+        # score computation, so both paths run f32 to stay numerically
+        # interchangeable (the latent cache is ~8x smaller than a GQA
+        # cache, so the bf16-operand byte saving matters much less here).
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1).astype(jnp.float32)
+        out = blockwise_attention(q_full, latent, None, positions, kpos,
+                                  causal=True, scale=scale, kv_map_fn=kv_map)
+
+    out = out.reshape(b, s, h * dv).astype(x.dtype)
+    out = linear_apply(params["o"], out, backend=backend)
+    return (out, cache) if cache is not None else out

@@ -1,0 +1,99 @@
+"""Minimal functional module system: parameter descriptors -> params.
+
+No flax/haiku on this box, and the dry-run must build parameter *shapes*
+without allocating 236B-scale weights — so model definitions construct
+trees of :class:`ParamDesc` (shape, dtype, logical axes, initializer), and
+three interpreters consume them:
+
+  * ``init_params``     — materialize real arrays (tests/examples/training)
+  * ``abstract_params`` — ShapeDtypeStructs only (the dry-run path)
+  * ``logical_axes``    — same-structure tree of logical-axis tuples, fed to
+                          ``parallel.sharding.to_named_sharding``
+
+Logical axis names used across the zoo:
+  "embed"    — d_model            -> usually replicated (or fsdp)
+  "vocab"    — vocabulary         -> model
+  "heads"    — attention heads    -> model
+  "kv_heads" — kv heads           -> model (with replication fallback)
+  "head_dim" — per-head dim       -> None
+  "mlp"      — ffn hidden         -> model
+  "experts"  — MoE expert count   -> model (EP) / None
+  "layers"   — stacked-scan layer -> None
+  "lora"     — MLA latent dim     -> None
+  "state"    — SSM state dim      -> None
+  "fsdp"     — weight-sharded dp  -> data (when fsdp enabled)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    """Declarative parameter: everything needed to init/shard/abstract it."""
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()                 # logical axes, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed | scan_normal
+    scale: float = 0.02
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def _leaf_init(key, d: ParamDesc) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init in ("normal", "embed", "scan_normal"):
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale
+                ).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_params(rng: jax.Array, tree) -> Any:
+    """Materialize a descriptor tree into real arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_desc)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_leaf_init(k, d) if is_desc(d) else d for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(tree) -> Any:
+    """ShapeDtypeStruct tree — zero allocation (dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype) if is_desc(d) else d,
+        tree, is_leaf=is_desc)
+
+
+def logical_axes(tree) -> Any:
+    """Tree of logical-axis tuples matching the descriptor tree."""
+    return jax.tree_util.tree_map(
+        lambda d: d.axes if is_desc(d) else None, tree, is_leaf=is_desc)
+
+
+def param_count(tree) -> int:
+    total = 0
+    for d in jax.tree_util.tree_leaves(tree, is_leaf=is_desc):
+        if is_desc(d):
+            total += int(np.prod(d.shape))
+    return total
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for d in jax.tree_util.tree_leaves(tree, is_leaf=is_desc):
+        if is_desc(d):
+            total += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+    return total

@@ -1,0 +1,215 @@
+"""Mamba2 SSD (state-space duality) block — chunked train/prefill + O(1)
+decode state.
+
+Follows the minimal-SSD formulation of Dao & Gu (arXiv:2405.21060):
+per-head scalar decay A, input-dependent dt (softplus), shared B/C
+projections (n_groups=1).  The sequence is processed in chunks:
+
+  intra-chunk:  y_intra = ((C_q . B_k) * decay(q,k) * lower-tri) @ x
+  chunk state:  S_c     = sum_k decay_to_end(k) * dt_k * B_k (x) x_k
+  inter-chunk:  h_{c+1} = exp(sum_chunk dtA) * h_c + S_c   (lax.scan)
+  y            = y_intra + C . h_prefix (decayed)
+
+Decode is the SSM recurrence on a [B, H, P, N] state + a depthwise-conv
+ring buffer — constant memory in sequence length, which is why the
+long_500k cell is natural for SSM/hybrid architectures.
+
+FIGLUT applies to in_proj / out_proj (the dominant GEMMs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_linear import linear_apply
+from repro.models.module import ParamDesc
+from repro.parallel.sharding import shard_act
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def ssm_desc(cfg):
+    d = cfg.d_model
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n            # x, B, C all pass the conv
+    return {
+        # in_proj emits [z (gate), xBC (conv path), dt] like mamba2
+        "in_proj": ParamDesc((2 * d_inner + 2 * n + h, d), jnp.bfloat16,
+                             ("mlp", "embed")),
+        "conv_w": ParamDesc((cfg.ssm_conv, conv_dim), jnp.bfloat16,
+                            (None, "mlp"), "normal"),
+        "conv_b": ParamDesc((conv_dim,), jnp.float32, ("mlp",), "zeros"),
+        "A_log": ParamDesc((h,), jnp.float32, ("heads",), "zeros"),
+        "D": ParamDesc((h,), jnp.float32, ("heads",), "ones"),
+        "dt_bias": ParamDesc((h,), jnp.float32, ("heads",), "zeros"),
+        "out_norm": ParamDesc((d_inner,), jnp.float32, ("mlp",), "ones"),
+        "out_proj": ParamDesc((d, d_inner), jnp.bfloat16, ("embed", "mlp")),
+    }
+
+
+def ssm_cache_desc(cfg, batch: int):
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": ParamDesc((batch, cfg.ssm_conv - 1, conv_dim),
+                          jnp.dtype(cfg.dtype),
+                          ("batch", None, "mlp"), "zeros"),
+        "state": ParamDesc((batch, h, cfg.ssm_head_dim, n), jnp.float32,
+                           ("batch", "heads", None, None), "zeros"),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner: 2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_norm(x, z, scale, eps=1e-6):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps) * scale
+    return y
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: [b, l, h, p]; dt: [b, l, h] (post-softplus); A: [h] (negative);
+    B, C: [b, l, n]  (n_groups = 1, shared across heads).
+    h0: optional initial state [b, h, p, n].
+    Returns (y [b, l, h, p], h_final [b, h, p, n]).
+    """
+    b, l, h, p = xh.shape
+    n = B.shape[-1]
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lc = chunk
+
+    # chunk-major for the scan: [nc, b, lc, ...]
+    xc = jnp.moveaxis(xh.reshape(b, nc, lc, h, p), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, lc, h), 1, 0).astype(jnp.float32)
+    Bc = jnp.moveaxis(B.reshape(b, nc, lc, n), 1, 0).astype(jnp.float32)
+    Cc = jnp.moveaxis(C.reshape(b, nc, lc, n), 1, 0).astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((lc, lc), jnp.float32))
+
+    def step(hprev, inp):
+        xi, dti, Bi, Ci = inp                        # per-chunk [b, lc, ...]
+        dA = dti * A[None, None, :]                  # [b, lc, h]  (<= 0)
+        cums = jnp.cumsum(dA, axis=1)
+        total = cums[:, -1, :]                       # [b, h]
+
+        # intra-chunk: decay(q,k) = exp(cums_q - cums_k) for q >= k
+        diff = cums[:, :, None, :] - cums[:, None, :, :]     # [b, q, k, h]
+        decay = jnp.exp(diff) * tri[None, :, :, None]
+        cb = jnp.einsum("bqn,bkn->bqk", Ci, Bi)
+        gates = cb[..., None] * decay * dti[:, None, :, :]   # [b, q, k, h]
+        # pin batch/head sharding on the quadratic intra-chunk tensors —
+        # same nested-scan-residual GSPMD failure as attention scores
+        gates = shard_act(gates, ("batch", None, None, "heads"))
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", gates, xi)
+
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Ci, jnp.exp(cums), hprev)
+
+        # state update to end of chunk
+        decay_to_end = jnp.exp(total[:, None, :] - cums)     # [b, lc, h]
+        s_chunk = jnp.einsum("bkn,bkh,bkhp->bhpn",
+                             Bi, dti * decay_to_end, xi)
+        hnew = jnp.exp(total)[:, :, None, None] * hprev + s_chunk
+        return hnew, y_intra + y_inter
+
+    h_init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, yc = jax.lax.scan(step, h_init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, nc * lc, h, p)
+    return y[:, :l], h_last
+
+
+def ssm_apply(params, cfg, x, *, cache=None, backend="dense"):
+    """Mamba2 block. x: [B, S, d].
+
+    cache=None: train/prefill-from-scratch (returns y only).
+    cache given: S==1 decode step OR prefill that fills the cache;
+                 returns (y, cache).
+    """
+    b, s, d = x.shape
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    p = cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * n
+    kw = cfg.ssm_conv
+
+    proj = linear_apply(params["in_proj"], x, backend=backend)
+    z, xbc, dt = _split_proj(cfg, proj)
+    A = -jnp.exp(params["A_log"])                        # negative decay
+
+    if cache is not None and s == 1:
+        # ---------------- decode: O(1) state update --------------------
+        conv_hist = cache["conv"]                         # [B, kw-1, conv_dim]
+        window = jnp.concatenate([conv_hist.astype(jnp.float32),
+                                  xbc.astype(jnp.float32)], axis=1)
+        conv_out = (window * params["conv_w"].astype(jnp.float32)[None]
+                    ).sum(1) + params["conv_b"]
+        xbc_t = jax.nn.silu(conv_out)                     # [B, conv_dim]
+        new_conv = window[:, 1:].astype(conv_hist.dtype)
+
+        xt = xbc_t[:, :d_inner].reshape(b, h, p)
+        Bt = xbc_t[:, d_inner:d_inner + n]
+        Ct = xbc_t[:, d_inner + n:]
+        dtt = jax.nn.softplus(dt[:, 0] + params["dt_bias"])  # [B, h]
+        dA = jnp.exp(dtt * A[None])                          # [B, h]
+        state = cache["state"]
+        state = dA[:, :, None, None] * state + \
+            jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        y = y + params["D"][None, :, None] * xt
+        y = y.reshape(b, 1, d_inner)
+        y = _gated_norm(y, z, params["out_norm"])
+        out = linear_apply(params["out_proj"], y.astype(x.dtype),
+                           backend=backend)
+        return out, {"conv": new_conv, "state": state}
+
+    # ---------------- train / prefill (chunked SSD) --------------------
+    # depthwise causal conv over the sequence
+    xbc_f = xbc.astype(jnp.float32)
+    pad_left = (jnp.zeros((b, kw - 1, conv_dim), jnp.float32) if cache is None
+                else cache["conv"].astype(jnp.float32))
+    xpad = jnp.concatenate([pad_left, xbc_f], axis=1)
+    conv_out = sum(
+        xpad[:, i: i + s] * params["conv_w"][i].astype(jnp.float32)[None, None]
+        for i in range(kw)) + params["conv_b"]
+    xbc_c = jax.nn.silu(conv_out)
+
+    xh = xbc_c[..., :d_inner].reshape(b, s, h, p)
+    xh = shard_act(xh, ("batch", None, "heads", None))
+    Bm = xbc_c[..., d_inner:d_inner + n]
+    Cm = xbc_c[..., d_inner + n:]
+    dtm = jax.nn.softplus(dt + params["dt_bias"][None, None])
+    dtm = shard_act(dtm, ("batch", None, "heads"))
+
+    h0 = None if cache is None else cache["state"]
+    y, h_last = ssd_chunked(xh, dtm, A, Bm, Cm, cfg.ssm_chunk, h0=h0)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)
+    y = _gated_norm(y, z, params["out_norm"])
+    out = linear_apply(params["out_proj"], y.astype(x.dtype), backend=backend)
+
+    if cache is None:
+        return out
+    new_conv = xpad[:, -(kw - 1):].astype(cache["conv"].dtype) if kw > 1 \
+        else cache["conv"]
+    return out, {"conv": new_conv, "state": h_last}

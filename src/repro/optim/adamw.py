@@ -1,0 +1,129 @@
+"""AdamW + schedules + gradient clipping + int8 gradient compression.
+
+Pure-JAX (no optax on this box).  State is a pytree (m, v, count) matching
+params; everything shards with the params' shardings (ZeRO-style when the
+params are FSDP-sharded).
+
+Gradient compression (``compress_grads``/``decompress_grads``): per-tensor
+symmetric int8 quantization with an error-feedback residual — applied
+*before* the cross-pod all-reduce so the wire bytes drop 4x; the residual
+carries the quantization error into the next step (Seide et al. / 1-bit
+Adam lineage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: object
+    v: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"        # cosine | linear | constant
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        decay = (0.5 * (1 + jnp.cos(jnp.pi * frac)) if cfg.schedule == "cosine"
+                 else 1.0 - frac)
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = state.count + 1
+    lr = schedule_lr(cfg, count)
+    b1c = 1 - cfg.beta1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - step_).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(count, new_m, new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+
+def compress_grads(grads, residual=None):
+    """-> (int8 tree, scales tree, new residual).  g ~= int8 * scale."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat, flat_r)]
+    unf = lambda i: jax.tree_util.tree_unflatten(treedef, [o[i] for o in outs])
+    return unf(0), unf(1), unf(2)
+
+
+def decompress_grads(q_tree, scale_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)

@@ -1,0 +1,5 @@
+from repro.quantize.ptq import (quantize_model, abstract_quantized_params,
+                                collect_linears, QUANT_KEYS)
+
+__all__ = ["quantize_model", "abstract_quantized_params", "collect_linears",
+           "QUANT_KEYS"]

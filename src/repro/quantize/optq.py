@@ -1,0 +1,180 @@
+"""OPTQ/GPTQ — the uniform-quantization baseline the paper compares against.
+
+The paper's Fig 17 FIGNA rows use OPTQ [10] (Frantar et al.): second-order
+post-training quantization.  Columns are quantized one at a time; the
+rounding error of each column is propagated into the not-yet-quantized
+columns through the inverse-Hessian factor, minimizing output error on a
+calibration set:
+
+    H     = 2 X^T X + lambda I          (X: calibration activations)
+    Hinv  = cholesky(H^{-1})            (upper)
+    for i in columns:
+        q_i   = round_to_grid(w_i)
+        err_i = (w_i - q_i) / Hinv[i, i]
+        W[:, i+1:] -= err_i (x) Hinv[i, i+1:]
+
+The quantized integer codes map EXACTLY into the BCQ(+offset) format
+(alpha_i = s*2^{i-1}, z = s*((2^q-1)/2 - z0)), so the FIGLUT engine
+executes OPTQ checkpoints natively — the interoperability the paper's
+Table I claims for BCQ-format accelerators.
+
+Pure JAX, jittable (lax.fori over columns with dynamic slices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bcq import BCQWeight, pack_planes
+
+
+def _grid_quant(col, scale, zero, levels):
+    """Round one column to its per-row uniform grid."""
+    q = jnp.clip(jnp.round(col / scale + zero), 0, levels)
+    return (q - zero) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "damp"))
+def _optq_core(w, h, bits, group_size, damp=0.01):
+    """w: [out, in] f32; h: [in, in] Hessian (2 X^T X). Returns wq dense +
+    per-(row, group) scale/zero."""
+    out, n = w.shape
+    levels = (1 << bits) - 1
+    g = group_size
+    n_groups = n // g
+
+    # dampened inverse Hessian, Cholesky factor (upper) as in GPTQ
+    diag_mean = jnp.mean(jnp.diag(h))
+    hd = h + damp * diag_mean * jnp.eye(n, dtype=h.dtype)
+    hinv = jnp.linalg.inv(hd)
+    hinv_u = jnp.linalg.cholesky(hinv, upper=True)        # [in, in]
+
+    # per-group asymmetric grids from the (pre-compensation) weights
+    wg = w.reshape(out, n_groups, g)
+    wmin = wg.min(-1)
+    wmax = wg.max(-1)
+    scale = jnp.maximum((wmax - wmin) / levels, 1e-12)    # [out, G]
+    zero = jnp.round(-wmin / scale)                       # [out, G]
+
+    def body(i, carry):
+        w_work, w_q = carry
+        col = jax.lax.dynamic_slice_in_dim(w_work, i, 1, axis=1)[:, 0]
+        gi = i // g
+        s = jax.lax.dynamic_slice_in_dim(scale, gi, 1, axis=1)[:, 0]
+        z = jax.lax.dynamic_slice_in_dim(zero, gi, 1, axis=1)[:, 0]
+        qcol = _grid_quant(col, s, z, levels)
+        d = jax.lax.dynamic_slice(hinv_u, (i, i), (1, 1))[0, 0]
+        err = (col - qcol) / jnp.maximum(d, 1e-9)         # [out]
+        # propagate into remaining columns:  w[:, i+1:] -= err * Hinv_u[i, i+1:]
+        row = jax.lax.dynamic_slice_in_dim(hinv_u, i, 1, axis=0)[0]  # [in]
+        mask = (jnp.arange(n) > i).astype(w.dtype)
+        w_work = w_work - jnp.outer(err, row * mask)
+        w_q = jax.lax.dynamic_update_slice_in_dim(
+            w_q, qcol[:, None], i, axis=1)
+        return w_work, w_q
+
+    w_q0 = jnp.zeros_like(w)
+    _, w_q = jax.lax.fori_loop(0, n, body, (w, w_q0))
+    return w_q, scale, zero
+
+
+def uniform_to_bcq(w_q: jax.Array, scale: jax.Array, zero: jax.Array,
+                   bits: int, group_size: int, in_features: int) -> BCQWeight:
+    """Exact mapping of uniform (code, scale, zero) grids into BCQ form."""
+    out, n = w_q.shape
+    levels = (1 << bits) - 1
+    n_groups = n // group_size
+    wg = w_q.reshape(out, n_groups, group_size)
+    codes = jnp.clip(jnp.round(wg / scale[..., None] + zero[..., None]),
+                     0, levels).astype(jnp.int32)
+    planes = []
+    for i in range(bits):
+        bit = (codes >> i) & 1
+        planes.append((bit * 2 - 1).astype(jnp.float32))
+    planes = jnp.stack(planes).reshape(bits, out, n)
+    pow2 = (2.0 ** jnp.arange(bits, dtype=jnp.float32)) / 2.0
+    alpha = scale[None] * pow2[:, None, None]
+    z = scale * (levels / 2.0 - zero)
+    return BCQWeight(packed=pack_planes(planes), alpha=alpha.astype(jnp.float32),
+                     z=z.astype(jnp.float32), group_size=group_size,
+                     in_features=in_features, out_features=out)
+
+
+def optq_quantize(w: jax.Array, x_cal: jax.Array, bits: int,
+                  group_size: int = 128, damp: float = 0.01) -> BCQWeight:
+    """OPTQ-quantize one [out, in] weight given calibration inputs
+    x_cal [n_samples, in]; returns the BCQ-format weight FIGLUT executes."""
+    w = jnp.asarray(w, jnp.float32)
+    out, n = w.shape
+    g = int(group_size)
+    npad = -(-n // g) * g
+    if npad != n:
+        w = jnp.pad(w, ((0, 0), (0, npad - n)), mode="edge")
+        x_cal = jnp.pad(jnp.asarray(x_cal, jnp.float32),
+                        ((0, 0), (0, npad - n)))
+    x_cal = jnp.asarray(x_cal, jnp.float32)
+    h = 2.0 * (x_cal.T @ x_cal) / x_cal.shape[0]
+    w_q, scale, zero = _optq_core(w, h, int(bits), g, damp)
+    return uniform_to_bcq(w_q, scale, zero, int(bits), g, n)
+
+
+def capture_calibration(model, params, batches, max_samples: int = 256):
+    """Run eager forward passes and record each linear's input activations.
+
+    Returns {path: f32[n_samples, in_features]} keyed by param path —
+    the calibration sets OPTQ consumes (the paper's OPTQ baseline uses a
+    WikiText-2 calibration set the same way).
+    """
+    from repro.core import quantized_linear as ql
+    from repro.quantize.ptq import _walk, _is_quant_leaf
+
+    id2path = {}
+    for path, leaf in _walk(params):
+        if _is_quant_leaf(path, leaf) and hasattr(leaf, "shape"):
+            id2path[id(leaf)] = path
+    store: dict = {}
+
+    def hook(w, x):
+        p = id2path.get(id(w))
+        if p is None:
+            return
+        flat = np.asarray(x.astype(jnp.float32)).reshape(-1, x.shape[-1])
+        take = min(max_samples, flat.shape[0])
+        idx = np.random.default_rng(0).choice(flat.shape[0], take,
+                                              replace=False)
+        store.setdefault(p, []).append(flat[idx])
+
+    ql.set_capture(hook)
+    try:
+        for batch in batches:
+            model.forward(params, batch)          # eager
+    finally:
+        ql.set_capture(None)
+    return {p: np.concatenate(v)[:max_samples] for p, v in store.items()}
+
+
+def optq_quantize_model(params, axes_tree, calib_fn, *, bits=4,
+                        group_size: int = 64, keys=None):
+    """OPTQ over a model's linears using layer-input calibration.
+
+    calib_fn(path) -> [n_samples, in_features] calibration activations for
+    the weight at ``path`` (callers typically capture layer inputs with a
+    forward hook pass; benchmarks use input-distribution surrogates).
+    """
+    from repro.quantize.ptq import _walk, _set_path, _is_quant_leaf, _axes_of
+    out = params
+    for path, leaf in list(_walk(params)):
+        axes = _axes_of(axes_tree, path)
+        if not _is_quant_leaf(path, leaf, axes):
+            continue
+        if keys is not None and path[-1] not in keys:
+            continue
+        if leaf.ndim != 2:
+            continue                      # stacked weights: PTQ path covers
+        x_cal = calib_fn(path, leaf.shape[-1])
+        wq = optq_quantize(leaf, x_cal, bits=bits, group_size=group_size)
+        out = _set_path(out, path, wq)
+    return out

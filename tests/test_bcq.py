@@ -1,0 +1,107 @@
+"""Unit tests for BCQ quantization (core/bcq.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bcq
+
+
+RNG = np.random.default_rng(42)
+
+
+def _w(m, n, seed=0):
+    return jnp.array(np.random.default_rng(seed).normal(size=(m, n)).astype(np.float32))
+
+
+class TestPacking:
+    def test_roundtrip(self):
+        planes = jnp.array(RNG.choice([-1.0, 1.0], size=(3, 4, 64)).astype(np.float32))
+        packed = bcq.pack_planes(planes)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (3, 4, 8)
+        out = bcq.unpack_planes(packed)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(planes))
+
+    def test_pack_rejects_unaligned(self):
+        with pytest.raises(ValueError):
+            bcq.pack_planes(jnp.ones((1, 2, 9)))
+
+    def test_accepts_01_planes(self):
+        bits = jnp.array(RNG.integers(0, 2, size=(2, 2, 16)).astype(np.float32))
+        packed = bcq.pack_planes(bits)
+        out = bcq.unpack_planes(packed)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits) * 2 - 1)
+
+
+class TestFromUniform:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_matches_rtn_levels(self, bits):
+        W = _w(32, 128, seed=bits)
+        wq = bcq.from_uniform(W, bits=bits, group_size=64)
+        dense = np.asarray(bcq.dequantize(wq))
+        # independent RTN reference
+        Wg = np.asarray(W).reshape(32, 2, 64)
+        wmin, wmax = Wg.min(-1, keepdims=True), Wg.max(-1, keepdims=True)
+        s = np.maximum((wmax - wmin) / (2**bits - 1), 1e-12)
+        rtn = (np.clip(np.round((Wg - wmin) / s), 0, 2**bits - 1) * s + wmin)
+        np.testing.assert_allclose(dense, rtn.reshape(32, 128), rtol=0, atol=1e-4)
+
+    def test_unaligned_input_dim(self):
+        W = _w(16, 100)
+        wq = bcq.from_uniform(W, bits=4, group_size=64)
+        assert wq.in_features == 100
+        dense = bcq.dequantize(wq)
+        assert dense.shape == (16, 100)
+        # error bounded by half step of the worst group
+        err = float(jnp.abs(dense - W).max())
+        assert err < float((W.max() - W.min()) / 15)
+
+
+class TestQuantize:
+    def test_error_decreases_with_bits(self):
+        W = _w(64, 256)
+        errs = []
+        for bits in (1, 2, 3, 4):
+            wq = bcq.quantize(W, bits=bits, group_size=128, iters=4)
+            errs.append(float(jnp.mean((bcq.dequantize(wq) - W) ** 2)))
+        assert all(a > b for a, b in zip(errs, errs[1:])), errs
+
+    def test_no_nans(self):
+        # includes pathological all-positive rows (constant greedy planes)
+        W = jnp.abs(_w(16, 128)) + 0.5
+        wq = bcq.quantize(W, bits=3, group_size=64, iters=5)
+        assert not bool(jnp.isnan(wq.alpha).any())
+        assert not bool(jnp.isnan(bcq.dequantize(wq)).any())
+
+    def test_beats_rtn(self):
+        """Non-uniform BCQ <= uniform RTN error (paper Table VI premise)."""
+        W = _w(64, 256, seed=7)
+        for bits in (2, 3):
+            e_bcq = float(jnp.mean((bcq.dequantize(
+                bcq.quantize(W, bits, 128, iters=5)) - W) ** 2))
+            e_rtn = float(jnp.mean((bcq.dequantize(
+                bcq.from_uniform(W, bits, 128)) - W) ** 2))
+            assert e_bcq <= e_rtn * 1.02, (bits, e_bcq, e_rtn)
+
+    def test_alternating_improves_on_greedy(self):
+        W = _w(64, 256, seed=9)
+        e0 = float(jnp.mean((bcq.dequantize(
+            bcq.quantize(W, 3, 128, iters=0)) - W) ** 2))
+        e5 = float(jnp.mean((bcq.dequantize(
+            bcq.quantize(W, 3, 128, iters=5)) - W) ** 2))
+        assert e5 < e0, (e0, e5)
+
+    def test_offset_helps_asymmetric(self):
+        W = jnp.abs(_w(32, 128)) + 2.0   # strongly shifted distribution
+        e_off = float(jnp.mean((bcq.dequantize(
+            bcq.quantize(W, 2, 64, iters=4, with_offset=True)) - W) ** 2))
+        e_no = float(jnp.mean((bcq.dequantize(
+            bcq.quantize(W, 2, 64, iters=4, with_offset=False)) - W) ** 2))
+        assert e_off < e_no
+
+    def test_nbytes_compression(self):
+        W = _w(128, 1024)
+        wq = bcq.quantize(W, bits=4, group_size=128, iters=1)
+        dense_bytes = 128 * 1024 * 2           # bf16
+        assert wq.nbytes() < dense_bytes * 0.5  # >2x compression at 4-bit

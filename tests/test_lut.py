@@ -1,0 +1,61 @@
+"""Unit tests for LUT construction/keying (core/lut.py)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import lut, bcq
+
+
+def test_build_lut_entries():
+    x = jnp.arange(1.0, 5.0)           # one group, mu=4
+    table = lut.build_lut(x[None], mu=4)[0, 0]   # [16]
+    # key p: bit j set -> +x_j
+    for p in range(16):
+        expect = sum((1 if (p >> j) & 1 else -1) * float(x[j]) for j in range(4))
+        assert abs(float(table[p]) - expect) < 1e-6
+
+
+def test_vertical_symmetry():
+    """LUT[p] == -LUT[2^mu-1-p]  (paper §III-D, the hFFLUT property)."""
+    x = jnp.array(np.random.default_rng(0).normal(size=(2, 8)).astype(np.float32))
+    t = lut.build_lut(x, mu=4)
+    flipped = t[..., ::-1]
+    np.testing.assert_allclose(np.asarray(t), -np.asarray(flipped), atol=1e-6)
+
+
+def test_half_lut_decode_matches_full():
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.normal(size=(3, 16)).astype(np.float32))
+    keys = jnp.array(rng.integers(0, 16, size=(3, 4)), jnp.int32)
+    full = lut.build_lut(x, mu=4)
+    half = lut.build_half_lut(x, mu=4)
+    assert half.shape[-1] == 8
+    want = jnp.take_along_axis(full, keys[..., None], axis=-1)[..., 0]
+    got = lut.decode_half_lut(half, keys, mu=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("mu", [1, 2, 4, 8])
+def test_keys_from_packed_consistent(mu):
+    rng = np.random.default_rng(mu)
+    planes = jnp.array(rng.choice([-1.0, 1.0], size=(2, 4, 32)).astype(np.float32))
+    packed = bcq.pack_planes(planes)
+    keys = lut.keys_from_packed(packed, mu)
+    want = lut.extract_keys(planes, mu)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(want))
+
+
+def test_generator_counts_match_paper():
+    """mu=4 half table: 14 adds, 42%% fewer than the naive 24 (§III-E)."""
+    naive = lut.naive_adder_count(4, half=True)
+    tree = lut.generator_adder_count(4, half=True)
+    assert naive == 24 and tree == 14
+    assert 1 - tree / naive == pytest.approx(0.42, abs=0.01)
+
+
+def test_generator_beats_k_racs_for_k_gt_4():
+    """14 adds per LUT < k*(mu-1) straightforward adds when k > 4 (§III-E)."""
+    adds_lut = lut.generator_adder_count(4, half=True)
+    for k in (5, 8, 32):
+        assert adds_lut < k * 3
+    assert adds_lut > 4 * 3  # and not for k<=4 — the paper's break-even

@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the system's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import bcq, lut
+from repro.core.lut_gemm import bcq_xla_matmul, bcq_xla_matmul_fused
+
+_SET = dict(max_examples=25, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def weight_matrices(draw):
+    m = draw(st.integers(8, 48))
+    n = draw(st.integers(16, 160))
+    seed = draw(st.integers(0, 2**16))
+    scale = draw(st.floats(0.01, 10.0))
+    rng = np.random.default_rng(seed)
+    return jnp.array((rng.normal(size=(m, n)) * scale).astype(np.float32))
+
+
+@given(weight_matrices(), st.integers(1, 4))
+@settings(**_SET)
+def test_pack_unpack_roundtrip(W, bits):
+    wq = bcq.quantize(W, bits=bits, group_size=32, iters=1)
+    planes = bcq.unpack_planes(wq.packed)
+    repacked = bcq.pack_planes(planes)
+    np.testing.assert_array_equal(np.asarray(repacked), np.asarray(wq.packed))
+
+
+@given(weight_matrices(), st.integers(2, 4))
+@settings(**_SET)
+def test_from_uniform_error_bound(W, bits):
+    """RTN-as-BCQ reconstruction error is <= half a quantization step."""
+    wq = bcq.from_uniform(W, bits=bits, group_size=32)
+    dense = bcq.dequantize(wq)
+    Wg = np.asarray(W)
+    # per-group step bound
+    m, n = Wg.shape
+    npad = -(-n // 32) * 32
+    Wp = np.pad(Wg, ((0, 0), (0, npad - n)), mode="edge").reshape(m, -1, 32)
+    step = (Wp.max(-1) - Wp.min(-1)) / (2**bits - 1)
+    bound = np.repeat(step, 32, axis=-1).reshape(m, npad)[:, :n]
+    err = np.abs(np.asarray(dense) - Wg)
+    assert (err <= bound / 2 + 1e-5).all()
+
+
+@given(weight_matrices())
+@settings(**_SET)
+def test_quantize_error_monotone_in_bits(W):
+    errs = [float(jnp.mean((bcq.dequantize(
+        bcq.quantize(W, bits=b, group_size=32, iters=2)) - W) ** 2))
+        for b in (1, 2, 3)]
+    assert errs[0] >= errs[1] - 1e-7 and errs[1] >= errs[2] - 1e-7
+
+
+@given(weight_matrices(), st.integers(0, 2**16))
+@settings(**_SET)
+def test_backends_agree(W, seed):
+    """bcq_xla (per-plane) == fused dequant matmul for any quantized weight.
+
+    Compared at f32 compute dtype — the algebraic-equivalence property;
+    the serve path's bf16 compute dtype trades ~bf16-eps accuracy for
+    halved weight traffic (covered by the kernel tests' tolerances).
+    """
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(3, W.shape[1])).astype(np.float32))
+    wq = bcq.from_uniform(W, bits=3, group_size=32)
+    a = bcq_xla_matmul(x, wq)
+    b = bcq_xla_matmul_fused(x, wq, compute_dtype=jnp.float32)
+    scale = float(jnp.abs(b).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                               atol=3e-6)
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=6, deadline=None)
+def test_lut_symmetry_any_mu(mu):
+    rng = np.random.default_rng(mu)
+    x = jnp.array(rng.normal(size=(1, mu * 4)).astype(np.float32))
+    t = lut.build_lut(x, mu=mu)
+    np.testing.assert_allclose(np.asarray(t), -np.asarray(t[..., ::-1]),
+                               atol=1e-6)
+
+
+@given(weight_matrices())
+@settings(**_SET)
+def test_dequantize_shape_and_finite(W):
+    wq = bcq.quantize(W, bits=2, group_size=32, iters=1)
+    d = bcq.dequantize(wq)
+    assert d.shape == W.shape
+    assert bool(jnp.isfinite(d).all())
