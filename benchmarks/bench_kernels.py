@@ -9,9 +9,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro import tune as tune_mod
 from repro.core import bcq
 from repro.kernels.lut_gemm import lut_gemm, ref as lref
 from repro.kernels.bcq_matmul import bcq_matmul
+
+
+def _tuned_vs_default(rng):
+    """Autotune both kernels on a small shape and report the speedup of
+    the measured winner over the heuristic default.  The heuristic is
+    candidate 0 of the tuner's space, so the winner's median can never be
+    slower — speedup >= 1.0 is a structural invariant, and > 1.0 means
+    the space genuinely contains a better launch for this point."""
+    M, N, B = 128, 256, 8
+    W = jnp.array(rng.normal(size=(M, N)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(B, N)).astype(np.float32))
+    wq = bcq.from_uniform(W, bits=4, group_size=128)
+    best_speedup = 0.0
+    for kernel in ("lut_gemm", "bcq_matmul"):
+        res = tune_mod.tune(kernel, x, wq, mu=4, reps=3, warmup=1,
+                            max_candidates=8, cache=None, interpret=True)
+        print(f"kernels,{kernel}_default_ms={res.default_time*1e3:.3f},"
+              f"tuned_ms={res.best_time*1e3:.3f},speedup={res.speedup:.2f},"
+              f"config=\"{res.best.to_kwargs(kernel)}\"")
+        best_speedup = max(best_speedup, res.speedup)
+    assert best_speedup >= 1.0, f"tuned slower than default: {best_speedup}"
+    return best_speedup
 
 
 def run():
@@ -38,7 +61,8 @@ def run():
                  n=2)
     common.bench("kernels,dense_oracle",
                  lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
-    return err1, err2
+    speedup = _tuned_vs_default(rng)
+    return err1, err2, speedup
 
 
 if __name__ == "__main__":

@@ -16,6 +16,12 @@ Backends (all numerically equivalent up to FP reassociation; tested):
 ``lut_pallas``/``mxu_pallas`` target TPU; on this CPU container they run
 under ``interpret=True`` (set ``repro.core.lut_gemm.INTERPRET = True`` —
 done automatically when no TPU is present).
+
+Launch geometry for the Pallas backends (block sizes, LUT read mode,
+hFFLUT) is resolved per call through :mod:`repro.tune` — tuned JSON-cache
+entries when present (``python -m repro.tune`` pre-tunes a model's layer
+shapes), deterministic heuristics otherwise.  Nothing in this module or
+its callers hard-codes a block constant.
 """
 from __future__ import annotations
 
@@ -95,6 +101,7 @@ def bcq_apply(x: jax.Array, w: BCQWeight, backend: Backend = "bcq_xla",
         return bcq_xla_matmul(x, w, out_dtype)
     if backend == "lut_pallas":
         from repro.kernels.lut_gemm import lut_gemm
+        # block sizes / read mode resolved via repro.tune dispatch
         return lut_gemm(x, w, interpret=INTERPRET, out_dtype=out_dtype)
     if backend == "mxu_pallas":
         from repro.kernels.bcq_matmul import bcq_matmul

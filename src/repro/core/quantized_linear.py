@@ -4,7 +4,10 @@ A linear's weight leaf is either a dense ``jax.Array`` (training /
 unquantized) or a :class:`~repro.core.bcq.BCQWeight` (post-PTQ serving).
 ``linear_apply`` dispatches transparently, so model code never branches on
 quantization state; the execution backend (dense / bcq_xla / lut_pallas /
-mxu_pallas) is a config knob threaded through apply.
+mxu_pallas) is a config knob threaded through apply.  For the Pallas
+backends the launch geometry is resolved per layer shape through
+:mod:`repro.tune` (tuned cache or heuristic) — no call site pins block
+sizes.
 """
 from __future__ import annotations
 

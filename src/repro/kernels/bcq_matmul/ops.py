@@ -1,10 +1,18 @@
-"""Public jit'd wrapper for the BCQ dequant-in-VMEM matmul kernel."""
+"""Public jit'd wrapper for the BCQ dequant-in-VMEM matmul kernel.
+
+Block sizes left as ``None`` resolve through
+:func:`repro.tune.dispatch.kernel_config` (tuned cache entry or the
+deterministic heuristic); explicit arguments always win.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bcq import BCQWeight
+from repro.tune import dispatch as _dispatch
 from . import bcq_matmul as _k
 
 
@@ -12,8 +20,8 @@ def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
 
-def bcq_matmul(x: jax.Array, w: BCQWeight, *, block_b: int = 8,
-               block_m: int = 128, block_n: int = 512,
+def bcq_matmul(x: jax.Array, w: BCQWeight, *, block_b: Optional[int] = None,
+               block_m: Optional[int] = None, block_n: Optional[int] = None,
                interpret: bool = False, out_dtype=None) -> jax.Array:
     """y = x @ dequant(w).T via the TPU-native packed-weight kernel."""
     out_dtype = out_dtype or x.dtype
@@ -24,6 +32,16 @@ def bcq_matmul(x: jax.Array, w: BCQWeight, *, block_b: int = 8,
 
     x2 = x.reshape(-1, n_logical)
     b = x2.shape[0]
+
+    if None in (block_b, block_m, block_n):
+        cfg = _dispatch.kernel_config(
+            "bcq_matmul", b=b, m=w.out_features, n=w.in_features,
+            dtype=x2.dtype, mu=0, group_size=w.group_size,
+            interpret=interpret, operands=(x2, w))
+        block_b = cfg.block_b if block_b is None else block_b
+        block_m = cfg.block_m if block_m is None else block_m
+        block_n = cfg.block_n if block_n is None else block_n
+
     q, m, _ = w.packed.shape
     n_pad_w = w.packed.shape[-1] * 8
     ag = w.alpha.shape[-1]

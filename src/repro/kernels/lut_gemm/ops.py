@@ -3,15 +3,24 @@
 Handles arbitrary leading batch dims, pads (B, M, N) up to block multiples,
 and dispatches to :func:`lut_gemm_tiled`.  The oracle for every path is
 ``ref.lut_ref`` / ``ref.dense_ref``.
+
+Launch geometry (block sizes, read mode, hFFLUT) is no longer hard-coded:
+any parameter left as ``None`` is resolved through
+:func:`repro.tune.dispatch.kernel_config` — tuned JSON-cache entry if one
+exists for this (batch-bucket, M, N, dtype, mu, group, device) point,
+deterministic heuristic otherwise.  Explicit arguments always win, so
+tests and the tuner itself can pin exact launches.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bcq import BCQWeight
+from repro.tune import dispatch as _dispatch
 from . import lut_gemm as _k
 
 
@@ -19,9 +28,10 @@ def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
 
-def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4, half_lut: bool = True,
-             read_mode: str = "onehot", block_b: int = 8, block_m: int = 128,
-             block_n: int = 512, interpret: bool = False,
+def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4,
+             half_lut: Optional[bool] = None, read_mode: Optional[str] = None,
+             block_b: Optional[int] = None, block_m: Optional[int] = None,
+             block_n: Optional[int] = None, interpret: bool = False,
              out_dtype=None) -> jax.Array:
     """y = x @ dequant(w).T via the FIGLUT Pallas kernel.
 
@@ -35,6 +45,18 @@ def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4, half_lut: bool = True,
 
     x2 = x.reshape(-1, n_logical)
     b = x2.shape[0]
+
+    if None in (half_lut, read_mode, block_b, block_m, block_n):
+        cfg = _dispatch.kernel_config(
+            "lut_gemm", b=b, m=w.out_features, n=w.in_features,
+            dtype=x2.dtype, mu=mu, group_size=w.group_size,
+            interpret=interpret, operands=(x2, w))
+        half_lut = cfg.half_lut if half_lut is None else half_lut
+        read_mode = cfg.read_mode if read_mode is None else read_mode
+        block_b = cfg.block_b if block_b is None else block_b
+        block_m = cfg.block_m if block_m is None else block_m
+        block_n = cfg.block_n if block_n is None else block_n
+
     n_pad_w = w.packed.shape[-1] * 8          # weight-side padded N (x8)
     q, m, _ = w.packed.shape
     ag = w.alpha.shape[-1]

@@ -18,6 +18,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--pretune", action="store_true",
+                    help="autotune kernel configs for this model's layer "
+                         "shapes before serving (persists to the JSON "
+                         "cache; see python -m repro.tune)")
     args = ap.parse_args()
 
     import jax
@@ -42,7 +46,8 @@ def main():
         model = Model(cfg.replace(gemm_backend=args.backend))
 
     eng = ServeEngine(model, params, slots=args.slots,
-                      cache_len=args.cache_len, prefill_buckets=(16, 32, 64))
+                      cache_len=args.cache_len, prefill_buckets=(16, 32, 64),
+                      pretune=args.pretune)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                (int(rng.integers(4, 24)),)),

@@ -36,12 +36,14 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 8,
                  cache_len: int = 512, prefill_buckets=(32, 128, 512),
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, pretune: bool = False):
         self.model = model
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.buckets = sorted(prefill_buckets)
+        if pretune:
+            self._pretune()
         self.cache = model.init_cache(slots, cache_len)
         self.slot_req: list = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
@@ -49,6 +51,28 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
         self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def _pretune(self):
+        """Warm the repro.tune cache for every quantized GEMM this engine
+        will launch — decode steps run b = active-slot rows, prefill runs
+        b = prompt-bucket rows — in the model's activation dtype, so the
+        first serving ticks hit tuned configs instead of the heuristic.
+        No-op for dense params or non-Pallas backends."""
+        from repro import tune as tune_mod
+        from repro.core import lut_gemm as core_lg
+        kernel = {"lut_pallas": "lut_gemm",
+                  "mxu_pallas": "bcq_matmul"}.get(self.model.cfg.gemm_backend)
+        if kernel is None or not tune_mod.collect_bcq_specs(self.params):
+            return
+        # interpret mode (CPU smoke): small reps + truncated space so
+        # pretune stays a warm-up, not a benchmark run
+        extra = dict(reps=2, warmup=1, max_candidates=8) if core_lg.INTERPRET else {}
+        batches = sorted({1, self.slots, *self.buckets})
+        tune_mod.pretune_params(self.params, kernels=(kernel,),
+                                batch_sizes=batches,
+                                dtype=jnp.dtype(self.model.cfg.dtype),
+                                verbose=True, **extra)
 
     # ------------------------------------------------------------------
     def _bucket(self, n: int) -> int:

@@ -1,0 +1,39 @@
+"""Kernel autotuning + dispatch for the FIGLUT Pallas kernels.
+
+The execution shape of a LUT GEMM — tile geometry, hFFLUT vs full table,
+mux-``select`` vs MXU-``onehot`` reads (paper §III-C/D) — swings
+throughput several-fold per (B, M, N, mu, device) point.  This package
+makes that choice a measured, cached decision instead of a hard-coded
+constant:
+
+  * :mod:`space`    — the config space + deterministic heuristic fallback
+  * :mod:`measure`  — warmup + block_until_ready + median-of-k timing
+  * :mod:`autotune` — validate-then-time tuner, shape/params pretuning
+  * :mod:`cache`    — JSON persistence keyed by
+                      (kernel, batch-bucket, M, N, dtype, mu, group, device)
+  * :mod:`dispatch` — the single resolution point the op wrappers call
+
+CLI: ``python -m repro.tune --arch opt_6_7b --bits 4`` pre-tunes every
+distinct linear-layer problem of a model config and persists the winners
+(``REPRO_TUNE_CACHE`` overrides the cache path; ``REPRO_TUNE=off``
+forces the heuristic path, ``auto`` tunes on cache miss on-device).
+"""
+from .space import (KERNELS, READ_MODES, KernelConfig, candidate_configs,
+                    clamp_config, heuristic_config)
+from .cache import (TuneCache, bucket_batch, cache_key, default_cache,
+                    device_tag, reset_default_cache)
+from .measure import measure
+from .dispatch import kernel_config, tune_mode
+from .autotune import (TuneResult, Timing, collect_bcq_specs, pretune_params,
+                       tune, tune_shape)
+
+__all__ = [
+    "KERNELS", "READ_MODES", "KernelConfig", "candidate_configs",
+    "clamp_config", "heuristic_config",
+    "TuneCache", "bucket_batch", "cache_key", "default_cache", "device_tag",
+    "reset_default_cache",
+    "measure",
+    "kernel_config", "tune_mode",
+    "TuneResult", "Timing", "collect_bcq_specs", "pretune_params", "tune",
+    "tune_shape",
+]

@@ -1,0 +1,126 @@
+"""Pre-tune the Pallas kernel configs for a model's layer shapes.
+
+    PYTHONPATH=src python -m repro.tune --arch opt_6_7b --bits 4 \
+        --batch 1 8 --kernels lut_gemm bcq_matmul
+
+Collects every distinct (out, in) GEMM problem of the arch (abstractly —
+no weights are allocated, so ``--full`` works for the 236B configs too),
+tunes each per batch bucket, prints a CSV summary and persists winners to
+the JSON cache (``--cache`` / ``REPRO_TUNE_CACHE``).  ``--shapes BxMxN``
+tunes explicit problems instead; ``--show`` dumps the current cache.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _model_shapes(arch: str, full: bool):
+    """(distinct (rows, cols) of every quantizable linear, activation
+    dtype name) for an arch, via eval_shape — no weights allocated."""
+    import jax
+    from repro.configs import get_config, get_reduced
+    from repro.models import Model
+    from repro.quantize.ptq import _axes_of, _is_quant_leaf, _lead_batch, _walk
+
+    cfg = get_config(arch) if full else get_reduced(arch)
+    model = Model(cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    axes_tree = model.axes()
+    shapes = []
+    for path, leaf in _walk(abstract):
+        axes = _axes_of(axes_tree, path)
+        if not _is_quant_leaf(path, leaf, axes):
+            continue
+        nb = _lead_batch(axes, len(leaf.shape))
+        rows = int(np.prod(leaf.shape[nb:-1]))
+        cols = int(leaf.shape[-1])
+        if (rows, cols) not in shapes:
+            shapes.append((rows, cols))
+    return shapes, cfg.dtype
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="opt_6_7b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) config's shapes")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=128)
+    ap.add_argument("--mu", type=int, default=4)
+    ap.add_argument("--batch", type=int, nargs="+", default=[1, 8])
+    ap.add_argument("--dtype", default=None,
+                    choices=["float32", "bfloat16", "float16"],
+                    help="activation dtype to tune for (cache keys embed "
+                         "it; defaults to the arch's dtype, else float32)")
+    ap.add_argument("--kernels", nargs="+", default=["lut_gemm", "bcq_matmul"],
+                    choices=["lut_gemm", "bcq_matmul"])
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--max-candidates", type=int, default=0,
+                    help="cap the candidate set (0 = full space)")
+    ap.add_argument("--cache", default=None, help="cache JSON path override")
+    ap.add_argument("--shapes", nargs="+", default=[], metavar="BxMxN",
+                    help="tune explicit problems instead of a model's")
+    ap.add_argument("--show", action="store_true", help="dump the cache")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force Pallas interpret mode (auto on non-TPU)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro import tune as T
+
+    cache = T.TuneCache(args.cache) if args.cache else T.default_cache()
+    if args.show:
+        print(json.dumps({"path": cache.path, "entries": cache.entries},
+                         indent=1, sort_keys=True))
+        return 0
+
+    dtype_name = args.dtype
+    if args.shapes:
+        problems = []
+        for s in args.shapes:
+            try:
+                b, m, n = (int(v) for v in s.lower().split("x"))
+            except ValueError:
+                ap.error(f"--shapes entry {s!r} must look like BxMxN, "
+                         f"e.g. 8x256x512")
+            problems.append((b, m, n))
+    else:
+        from repro.configs.base import ARCH_IDS
+        arch = args.arch.replace("-", "_").replace(".", "_")
+        if arch not in ARCH_IDS:
+            ap.error(f"unknown --arch {args.arch!r}; known: {ARCH_IDS}")
+        shapes, cfg_dtype = _model_shapes(arch, args.full)
+        dtype_name = dtype_name or cfg_dtype      # serve-time activations
+        print(f"# {args.arch}{' (full)' if args.full else ' (reduced)'}: "
+              f"{len(shapes)} distinct linear shapes, dtype {dtype_name}")
+        problems = [(b, m, n) for (m, n) in shapes for b in args.batch]
+
+    import jax.numpy as jnp
+    dtype = jnp.dtype(dtype_name or "float32")
+    interpret = True if args.interpret else None
+    print("kernel,b,m,n,candidates,default_ms,best_ms,speedup,config")
+    for b, m, n in problems:
+        for kernel in args.kernels:
+            res = T.tune_shape(
+                kernel, b=b, m=m, n=n, bits=args.bits,
+                group_size=args.group_size, mu=args.mu, dtype=dtype,
+                cache=cache, reps=args.reps, warmup=args.warmup,
+                max_candidates=args.max_candidates, interpret=interpret,
+                verbose=args.verbose)
+            cfgkw = res.best.to_kwargs(kernel)
+            print(f"{kernel},{b},{m},{n},{len(res.timings)},"
+                  f"{res.default_time*1e3:.3f},{res.best_time*1e3:.3f},"
+                  f"{res.speedup:.2f},\"{cfgkw}\"")
+    path = cache.save()
+    print(f"# saved {len(cache)} entries -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

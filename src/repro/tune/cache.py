@@ -1,0 +1,126 @@
+"""JSON persistence for tuned kernel configs.
+
+One flat JSON file maps a deterministic string key
+
+    <kernel>|b<batch-bucket>|m<M>|n<N>|<dtype>|mu<mu>|g<group>|<device>
+
+to the winning :class:`~repro.tune.space.KernelConfig` plus measurement
+metadata.  The batch dim is bucketed to the next power of two (floor 8 —
+the f32 sublane tile) because serving batch sizes vary tick-to-tick as
+slots drain; M/N are the weight's logical dims and stay exact.  The
+device tag is JAX's ``device_kind`` with ``+interpret`` appended when the
+kernel runs under the Pallas interpreter, so CPU-interpret tuning (CI)
+never shadows real-TPU entries.
+
+Writes are atomic (tmp file + rename) with sorted keys, so saving the
+same cache twice yields byte-identical files — the round-trip
+determinism the tuner tests pin.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax
+
+from .space import KernelConfig
+
+SCHEMA_VERSION = 1
+
+_ENV_PATH = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro", "tune_cache.json")
+
+
+def bucket_batch(b: int) -> int:
+    """Next power of two, floor 8 (the f32 sublane tile)."""
+    return max(8, 1 << max(0, int(b) - 1).bit_length())
+
+
+def device_tag(interpret: bool = False) -> str:
+    kind = jax.devices()[0].device_kind.replace(" ", "_").replace("|", "_")
+    return f"{kind}+interpret" if interpret else kind
+
+
+def cache_key(kernel: str, *, b: int, m: int, n: int, dtype,
+              mu: int, group_size: int, device: Optional[str] = None,
+              interpret: bool = False) -> str:
+    dev = device or device_tag(interpret)
+    return (f"{kernel}|b{bucket_batch(b)}|m{int(m)}|n{int(n)}|{dtype}"
+            f"|mu{int(mu)}|g{int(group_size)}|{dev}")
+
+
+class TuneCache:
+    """In-memory view over one JSON cache file."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(
+            path or os.environ.get(_ENV_PATH) or _DEFAULT_PATH)
+        self.entries: dict = {}
+        self.load()
+
+    # ------------------------------------------------------------------
+    def load(self) -> "TuneCache":
+        self.entries = {}
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+            if isinstance(blob, dict) and blob.get("version") == SCHEMA_VERSION:
+                self.entries = dict(blob.get("entries", {}))
+        except (OSError, ValueError):
+            pass                                  # cold or corrupt -> empty
+        return self
+
+    def save(self) -> str:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        blob = {"version": SCHEMA_VERSION,
+                "entries": dict(sorted(self.entries.items()))}
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return self.path
+
+    # ------------------------------------------------------------------
+    def lookup(self, key: str) -> Optional[KernelConfig]:
+        ent = self.entries.get(key)
+        if not ent:
+            return None
+        try:
+            return KernelConfig.from_dict(ent["config"])
+        except (KeyError, TypeError):
+            return None
+
+    def store(self, key: str, cfg: KernelConfig, **meta) -> None:
+        self.entries[key] = {"config": cfg.to_dict(), **meta}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+# ---------------------------------------------------------------------------
+# process-wide default cache (what dispatch consults)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[TuneCache] = None
+
+
+def default_cache() -> TuneCache:
+    global _DEFAULT
+    if _DEFAULT is None or _DEFAULT.path != os.path.expanduser(
+            os.environ.get(_ENV_PATH) or _DEFAULT_PATH):
+        _DEFAULT = TuneCache()
+    return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    """Drop the process-wide cache (tests / after env changes)."""
+    global _DEFAULT
+    _DEFAULT = None

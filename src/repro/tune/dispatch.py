@@ -1,0 +1,69 @@
+"""The single dispatch point that picks a launch config for a kernel call.
+
+Every ``lut_gemm`` / ``bcq_matmul`` call whose caller did not pin the
+geometry lands here.  Resolution order:
+
+  1. tuned entry in the JSON cache (keyed per cache.cache_key), unless
+     tuning is disabled;
+  2. with ``REPRO_TUNE=auto`` and a real device (not interpret mode):
+     tune on miss with the live operands, persist, return the winner;
+  3. deterministic heuristic (seed defaults clamped to the shape).
+
+``REPRO_TUNE`` modes: ``on`` (default — cache then heuristic), ``off`` /
+``0`` (heuristic only; fully deterministic, no file IO), ``auto``
+(tune-on-miss).  Config resolution is shape-driven and happens eagerly in
+the op wrappers — shapes are static even under jit tracing, so dispatch
+adds no traced ops.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from . import cache as cache_mod
+from .space import KernelConfig, clamp_config, heuristic_config
+
+_ENV_MODE = "REPRO_TUNE"
+
+
+def tune_mode() -> str:
+    mode = os.environ.get(_ENV_MODE, "on").strip().lower()
+    if mode in ("off", "0", "heuristic", "disable", "disabled"):
+        return "off"
+    if mode == "auto":
+        return "auto"
+    return "on"
+
+
+def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,
+                  mu: int = 0, group_size: int = 128,
+                  interpret: bool = False,
+                  operands=None) -> KernelConfig:
+    """Resolve the launch config for one (kernel, problem) point.
+
+    b/m/n are the *logical* batch rows, out_features, in_features;
+    ``operands=(x2, w)`` (2-D activations + BCQWeight) enables
+    tune-on-miss under ``REPRO_TUNE=auto``.
+    """
+    mode = tune_mode()
+    if mode != "off":
+        key = cache_mod.cache_key(kernel, b=b, m=m, n=n, dtype=dtype,
+                                  mu=mu, group_size=group_size,
+                                  interpret=interpret)
+        hit = cache_mod.default_cache().lookup(key)
+        if hit is not None:
+            return clamp_config(hit, kernel, b=b, m=m, n=n,
+                                group_size=group_size)
+        if mode == "auto" and not interpret and operands is not None:
+            import jax
+            if not any(isinstance(o, jax.core.Tracer) for o in operands):
+                # concrete operands only — under jit tracing we fall through
+                # to the heuristic (tune offline with `python -m repro.tune`)
+                from . import autotune                # lazy: avoids cycle
+                res = autotune.tune(kernel, *operands, mu=mu or 4,
+                                    cache=cache_mod.default_cache(),
+                                    interpret=interpret)
+                cache_mod.default_cache().save()
+                return res.best
+    return heuristic_config(kernel, b=b, m=m, n=n, mu=mu or 4,
+                            group_size=group_size)

@@ -1,0 +1,30 @@
+"""Wall-clock measurement harness for kernel candidates.
+
+``measure`` follows the standard JAX micro-bench discipline: warmup
+iterations first (absorbing jit compilation and autotuner-invisible
+first-touch costs), then k timed iterations each fenced with
+``jax.block_until_ready`` so dispatch-async never under-reports, and the
+*median* is returned — medians are robust to the occasional scheduler
+hiccup that poisons means on shared CPU runners.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+
+def measure(fn: Callable, *, n: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call of ``fn`` over ``n`` fenced iterations."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(statistics.median(times))

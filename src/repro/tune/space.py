@@ -1,0 +1,130 @@
+"""Config space for the Pallas kernels (FIGLUT §III-C/D execution shapes).
+
+A :class:`KernelConfig` fixes everything the launcher may vary per call
+site: the (block_b, block_m, block_n) tile geometry plus, for the LUT
+kernel, the RAC read mode (``select`` mux sweep vs MXU ``onehot``
+contraction vs ``gather``) and whether the half table (hFFLUT) is built.
+
+``candidate_configs`` enumerates the space *already clamped to a concrete
+(B, M, N) problem* and de-duplicated — on a small layer most of the grid
+collapses onto a handful of distinct launches, so the tuner never times
+the same launch twice.  ``heuristic_config`` is the deterministic
+fallback used when no tuned entry exists (tuning disabled, cold cache,
+or interpret mode off-device): it reproduces the seed defaults clamped
+to the shape, so untuned behavior is exactly the pre-tuner behavior.
+
+TPU tiling constraints (pallas_guide: f32 min tile 8x128, lane dim 128)
+shape the grid: block_n candidates are multiples of 128, block_m/block_b
+multiples of 8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+KERNELS = ("lut_gemm", "bcq_matmul")
+
+READ_MODES = ("onehot", "select", "gather")
+
+# enumeration grids (pre-clamp); heuristic defaults are the seed constants
+_BLOCK_B = (8, 16, 32)
+_BLOCK_M = (64, 128, 256)
+_BLOCK_N = (256, 512, 1024)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One launch configuration.  ``read_mode``/``half_lut`` only affect
+    the ``lut_gemm`` kernel; they are normalized to the defaults for
+    ``bcq_matmul`` so configs compare/dedupe cleanly."""
+
+    block_b: int = 8
+    block_m: int = 128
+    block_n: int = 512
+    read_mode: str = "onehot"
+    half_lut: bool = True
+
+    def to_kwargs(self, kernel: str) -> dict:
+        """kwargs for the kernel's public op wrapper."""
+        kw = dict(block_b=self.block_b, block_m=self.block_m,
+                  block_n=self.block_n)
+        if kernel == "lut_gemm":
+            kw.update(read_mode=self.read_mode, half_lut=self.half_lut)
+        return kw
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def clamp_config(cfg: KernelConfig, kernel: str, *, b: int, m: int, n: int,
+                 group_size: int) -> KernelConfig:
+    """Snap a config onto a concrete problem so the tiled kernel's
+    divisibility asserts hold (mirrors the padding math in ops.py)."""
+    n_pad = _round_up(max(n, 1), group_size)
+    block_n = _round_up(min(cfg.block_n, n_pad), group_size)
+    block_m = _round_up(min(cfg.block_m, _round_up(max(m, 1), 8)), 8)
+    block_b = _round_up(min(cfg.block_b, _round_up(max(b, 1), 8)), 8)
+    read_mode = cfg.read_mode if kernel == "lut_gemm" else "onehot"
+    half_lut = cfg.half_lut if kernel == "lut_gemm" else True
+    return KernelConfig(block_b=block_b, block_m=block_m, block_n=block_n,
+                        read_mode=read_mode, half_lut=half_lut)
+
+
+def heuristic_config(kernel: str, *, b: int, m: int, n: int,
+                     mu: int = 4, group_size: int = 128) -> KernelConfig:
+    """Deterministic no-measurement fallback.
+
+    Reproduces the seed defaults (8, 128, 512, onehot, hFFLUT) with a
+    mild batch scaling — decode (b <= 8) keeps the minimum f32 sublane
+    tile, larger batches grow block_b so the LUT build amortizes over
+    more rows per launch.
+    """
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; known: {KERNELS}")
+    block_b = 8 if b <= 8 else (16 if b <= 16 else 32)
+    base = KernelConfig(block_b=block_b, block_m=128, block_n=512,
+                        read_mode="onehot", half_lut=True)
+    return clamp_config(base, kernel, b=b, m=m, n=n, group_size=group_size)
+
+
+def candidate_configs(kernel: str, *, b: int, m: int, n: int, mu: int = 4,
+                      group_size: int = 128,
+                      max_candidates: int = 0) -> list:
+    """Enumerate the clamped, de-duplicated config space for one problem.
+
+    The heuristic config is always candidate 0, so a tuner that selects
+    the argmin over this list can never do worse than the untuned path.
+    ``read_mode``/``half_lut`` vary fastest so a truncated prefix
+    (``max_candidates``) still spans the execution-mode axis of the space.
+    """
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; known: {KERNELS}")
+    if kernel == "lut_gemm" and group_size % mu:
+        raise ValueError(f"group_size {group_size} not divisible by mu {mu}")
+    modes = READ_MODES if kernel == "lut_gemm" else ("onehot",)
+    halves = (True, False) if kernel == "lut_gemm" else (True,)
+
+    out = [heuristic_config(kernel, b=b, m=m, n=n, mu=mu,
+                            group_size=group_size)]
+    seen = {out[0]}
+    for bb, bm, bn, rm, hl in itertools.product(
+            _BLOCK_B, _BLOCK_M, _BLOCK_N, modes, halves):
+        cfg = clamp_config(
+            KernelConfig(bb, bm, bn, rm, hl), kernel,
+            b=b, m=m, n=n, group_size=group_size)
+        if cfg not in seen:
+            seen.add(cfg)
+            out.append(cfg)
+    if max_candidates and len(out) > max_candidates:
+        out = out[:max_candidates]
+    return out

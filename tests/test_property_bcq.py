@@ -1,6 +1,12 @@
 """Hypothesis property tests for the system's core invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -e .[dev]) — the suite "
+           "must collect without it")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import bcq, lut
