@@ -21,6 +21,7 @@ BENCHES = [
     ("fig16_topsw", "benchmarks.bench_fig16_topsw"),
     ("table5_comparison", "benchmarks.bench_table5_comparison"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("serve", "benchmarks.bench_serve"),                       # paged engine
     ("table4_numerics", "benchmarks.bench_table4_numerics"),   # trains tiny LM
     ("fig17_tradeoff", "benchmarks.bench_fig17_tradeoff"),     # reuses it
 ]

@@ -1,6 +1,7 @@
 """End-to-end driver (the paper's deployment shape): quantize an LM to
-sub-4-bit BCQ and serve batched requests through the continuous-batching
-engine on the LUT/BCQ execution path.
+sub-4-bit BCQ and serve batched requests through the paged-KV
+continuous-batching engine on the LUT/BCQ execution path, streaming
+tokens as they decode.
 
     PYTHONPATH=src python examples/serve_quantized.py [--bits 3] [--requests 8]
 """
@@ -13,7 +14,7 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.models import Model
 from repro.quantize import quantize_model
-from repro.serve.engine import ServeEngine, Request
+from repro.serve import PagedServeEngine, Request
 
 
 def main():
@@ -35,14 +36,21 @@ def main():
     print(f"[serve] BCQ-{args.bits}bit quantization in {time.time()-t0:.1f}s")
 
     model_q = Model(cfg.replace(gemm_backend="bcq_xla"))
-    engine = ServeEngine(model_q, qparams, slots=4, cache_len=128,
-                         prefill_buckets=(16, 32))
+    streamed = {}
+
+    def on_token(tok, req):
+        streamed.setdefault(req.uid, []).append(tok)
+
+    engine = PagedServeEngine(model_q, qparams, num_blocks=24, block_size=8,
+                              max_batch=4, max_seq_len=128,
+                              prefill_buckets=(16, 32))
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=(rng.integers(5, 20),)),
                     max_new_tokens=args.max_new,
-                    temperature=0.0 if i % 2 == 0 else 0.8)
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    on_token=on_token)
             for i in range(args.requests)]
     t0 = time.time()
     done = engine.run(reqs, max_ticks=1000)
@@ -51,9 +59,16 @@ def main():
     print(f"[serve] {len(done)}/{len(reqs)} requests done, "
           f"{total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens/dt:.1f} tok/s across {engine.ticks} ticks)")
+    s = engine.metrics.summary()
+    print(f"[serve] ttft p50={s['ttft_s']['p50']*1e3:.1f}ms  "
+          f"pool occupancy peak={s['occupancy']['peak']:.2f}  "
+          f"preempted={s['counters']['preempted']}")
     for r in done[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
     assert len(done) == len(reqs)
+    assert all(streamed[r.uid] == r.out_tokens for r in done), \
+        "streaming callbacks must see every token in order"
+    engine.pool.check()
     print("serve_quantized OK")
 
 

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
         --bits 3 --requests 16
+
+Default engine is the paged-KV engine (block pool + chunked-prefill
+scheduler + streaming + metrics); ``--engine slots`` falls back to the
+contiguous fixed-slot engine (required for SSM/hybrid, enc-dec and
+sliding-window models, which the paged cache does not cover).
 """
 import argparse
 import time
@@ -16,8 +21,28 @@ def main():
     ap.add_argument("--backend", default="bcq_xla")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "paged", "slots"],
+                    help="auto picks paged where the model supports it "
+                         "(attention-only, no SWA/enc-dec), else slots")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[slots engine] fixed cache rows")
+    ap.add_argument("--cache-len", type=int, default=256,
+                    help="[slots engine] per-row KV reservation (also the "
+                         "paged engine's default --max-seq-len)")
+    ap.add_argument("--max-seq-len", type=int, default=0,
+                    help="[paged engine] per-sequence context cap "
+                         "(default: --cache-len)")
+    ap.add_argument("--num-blocks", type=int, default=64,
+                    help="[paged engine] shared KV pool size")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[paged engine] tokens per block")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="[paged engine] concurrent sequences")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics summary to this path")
     ap.add_argument("--pretune", action="store_true",
                     help="autotune kernel configs for this model's layer "
                          "shapes before serving (persists to the JSON "
@@ -29,7 +54,8 @@ def main():
     from repro.configs import get_config, get_reduced
     from repro.models import Model
     from repro.quantize import quantize_model
-    from repro.serve.engine import ServeEngine, Request
+    from repro.serve import PagedServeEngine, Request, ServeEngine
+    from repro.serve.engine import supports_paging
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, args.cache_len))
@@ -45,19 +71,48 @@ def main():
               f"{time.time()-t0:.1f}s")
         model = Model(cfg.replace(gemm_backend=args.backend))
 
-    eng = ServeEngine(model, params, slots=args.slots,
-                      cache_len=args.cache_len, prefill_buckets=(16, 32, 64),
-                      pretune=args.pretune)
+    on_token = None
+    if args.stream:
+        on_token = lambda tok, req: print(f"  [stream] req {req.uid} "
+                                          f"+tok {tok}")
+    engine = args.engine
+    if engine == "auto":
+        engine = "paged" if supports_paging(cfg) else "slots"
+        print(f"[launch.serve] engine=auto -> {engine}")
+    if engine == "paged":
+        eng = PagedServeEngine(model, params, num_blocks=args.num_blocks,
+                               block_size=args.block_size,
+                               max_batch=args.max_batch,
+                               max_seq_len=args.max_seq_len or args.cache_len,
+                               prefill_buckets=(16, 32, 64),
+                               pretune=args.pretune)
+    else:
+        eng = ServeEngine(model, params, slots=args.slots,
+                          cache_len=args.cache_len,
+                          prefill_buckets=(16, 32, 64),
+                          pretune=args.pretune)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                (int(rng.integers(4, 24)),)),
-                    max_new_tokens=args.max_new) for i in range(args.requests)]
+                    max_new_tokens=args.max_new, on_token=on_token)
+            for i in range(args.requests)]
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[launch.serve] {len(done)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s")
+    if engine == "paged":
+        s = eng.metrics.summary()
+        print(f"[launch.serve] ttft p50={s['ttft_s']['p50']*1e3:.1f}ms "
+              f"p95={s['ttft_s']['p95']*1e3:.1f}ms  "
+              f"per-token p50={s['per_token_s']['p50']*1e3:.1f}ms  "
+              f"occupancy mean={s['occupancy']['mean']:.2f} "
+              f"peak={s['occupancy']['peak']:.2f}  "
+              f"preempted={s['counters']['preempted']}")
+        if args.metrics_json:
+            eng.metrics.to_json(args.metrics_json)
+            print(f"[launch.serve] metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -236,8 +236,108 @@ def cache_desc_mla(cfg, batch: int, length: int):
     }
 
 
+def paged_cache_desc(cfg, batch: int, num_blocks: int, block_size: int,
+                     max_blocks_per_seq: int):
+    """Paged per-layer cache: the contiguous descriptors with batch ->
+    num_blocks and length -> block_size (the pool), plus the block table.
+
+    Sliding-window attention keeps its ring cache (paging a ring buys
+    nothing: the window is already a fixed-size reservation), so paged
+    caches are only built for full-attention configs.
+    """
+    if cfg.sliding_window:
+        raise ValueError("paged KV cache requires sliding_window == 0 "
+                         "(ring caches are already fixed-size)")
+    base = (cache_desc_mla if cfg.attention == "mla" else cache_desc_gqa)(
+        cfg, num_blocks, block_size)
+    base["block_tables"] = ParamDesc((batch, max_blocks_per_seq), jnp.int32,
+                                     ("batch", None), "zeros")
+    return base
+
+
 def empty_pos(pos_like):
     return jnp.full_like(pos_like, -1)
+
+
+# --- paged layout -----------------------------------------------------------
+#
+# A paged per-layer cache stores every buffer as a shared pool
+# [num_blocks, block_size, ...] plus a ``block_tables`` leaf
+# [B, max_blocks_per_seq] int32 mapping each sequence's logical block i
+# (positions [i*bs, (i+1)*bs)) to a physical pool block (-1 = unallocated).
+# Physical block 0 is reserved as a trash block: any write whose target is
+# out of range or unallocated lands there, and ``paged_view`` masks every
+# slot reached through a -1 table entry, so trash contents are never read.
+# The same ``pos``-based masking that drives the contiguous cache then
+# makes a gathered view of the pool indistinguishable from a contiguous
+# cache to the attention math.
+
+
+def is_paged(cache: dict) -> bool:
+    return "block_tables" in cache
+
+
+def paged_view(cache: dict) -> dict:
+    """Gather a per-sequence contiguous view of a paged cache.
+
+    Returns a dict shaped like a contiguous cache ([B, max_blocks * bs,
+    ...]) whose ``pos`` is -1 wherever the slot is not live — directly
+    consumable by ``decode_attend`` / ``blockwise_attention``.
+    """
+    table = cache["block_tables"]                 # [B, nblk]
+    b, nblk = table.shape
+    bs = cache["pos"].shape[1]
+    safe = jnp.maximum(table, 0).reshape(-1)
+    view = {}
+    for key, val in cache.items():
+        if key == "block_tables":
+            continue
+        g = jnp.take(val, safe, axis=0)           # [B*nblk, bs, ...]
+        view[key] = g.reshape(b, nblk * bs, *val.shape[2:])
+    # A slot is live iff its table entry is allocated AND its stored
+    # position equals its logical view index (position p always lands at
+    # view index p).  The second check is what makes pool recycling
+    # safe: a freed block re-allocated at a different logical index
+    # still holds the previous owner's pos values, which would otherwise
+    # pass the kpos <= qpos mask and leak dead K/V into attention.
+    allocated = jnp.repeat(table >= 0, bs, axis=1)            # [B, nblk*bs]
+    iota = jnp.arange(nblk * bs, dtype=jnp.int32)[None]
+    view["pos"] = jnp.where(allocated & (view["pos"] == iota),
+                            view["pos"], -1)
+    return view
+
+
+def _paged_insert(cache: dict, updates: dict, at) -> dict:
+    """Scatter S new entries into the block pool via the block tables.
+
+    Position p of row b lives at physical slot ``table[b, p // bs] * bs
+    + p % bs``.  Writes with a negative position (masked left-pads), a
+    logical block beyond the table, or an unallocated table entry are
+    routed to the reserved trash block 0.
+    """
+    table = cache["block_tables"]                 # [B, nblk]
+    nb, bs = cache["pos"].shape
+    b, nblk = table.shape
+    s = next(iter(updates.values())).shape[1]
+    at = jnp.asarray(at, jnp.int32)
+    if at.ndim == 0:
+        at = jnp.broadcast_to(at, (b,))
+    positions = at[:, None] + jnp.arange(s, dtype=jnp.int32)[None]   # [B, S]
+    blk = positions // bs
+    phys = jnp.take_along_axis(table, jnp.clip(blk, 0, nblk - 1), axis=1)
+    valid = (positions >= 0) & (blk < nblk) & (phys >= 0)
+    phys = jnp.where(valid, phys, 0)              # invalid -> trash block
+    flat = phys * bs + positions % bs             # [B, S] into [nb*bs]
+
+    new = dict(cache)
+    for key, val in updates.items():
+        buf = cache[key]
+        fb = buf.reshape(nb * bs, *buf.shape[2:])
+        new[key] = fb.at[flat].set(val.astype(buf.dtype)).reshape(buf.shape)
+    posf = cache["pos"].reshape(nb * bs)
+    new["pos"] = posf.at[flat].set(
+        jnp.where(valid, positions, -1)).reshape(nb, bs)
+    return new
 
 
 def cache_insert(cache: dict, updates: dict, at):
@@ -245,9 +345,13 @@ def cache_insert(cache: dict, updates: dict, at):
 
     ``at`` is a scalar or per-row [B] vector (ragged continuous batching).
     Slot convention: position p lives at slot p % L (ring semantics; a
-    full-length cache is the special case L >= max position).
+    full-length cache is the special case L >= max position).  Paged
+    caches (``block_tables`` present) scatter through the block table
+    instead — see ``_paged_insert``.
     ``updates`` maps cache keys -> [B, S, ...] new values.
     """
+    if is_paged(cache):
+        return _paged_insert(cache, updates, at)
     b, length = cache["pos"].shape
     s = next(iter(updates.values())).shape[1]
     if s > length:
@@ -320,9 +424,20 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
         vq, vs = _quantize_kv(v)
         cache = cache_insert(cache, {"k": kq, "v": vq,
                                      "k_scale": ks, "v_scale": vs}, cache_at)
+        kv = paged_view(cache) if is_paged(cache) else cache
         if s == 1:
-            out = decode_attend(q, cache, positions,
+            out = decode_attend(q, kv, positions,
                                 window=cfg.sliding_window)
+        elif is_paged(cache):
+            # chunked prefill: earlier chunks are only in the cache, so
+            # attend over the dequantized view (unlike the whole-prompt
+            # path below, the cache is NOT empty here)
+            kd = (kv["k"].astype(jnp.float32)
+                  * kv["k_scale"][..., None]).astype(k.dtype)
+            vd = (kv["v"].astype(jnp.float32)
+                  * kv["v_scale"][..., None]).astype(v.dtype)
+            out = blockwise_attention(q, kd, vd, positions, kv["pos"],
+                                      causal=True)
         else:
             # prefill: attend over the fresh bf16 K/V (the cache was empty,
             # so causal/windowed attention over the prompt is equivalent) —
@@ -332,11 +447,13 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
     elif s == 1:
         # decode fast path: contract in cache layout, bf16 reads
         cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
-        out = decode_attend(q, cache, positions, window=cfg.sliding_window)
+        kv = paged_view(cache) if is_paged(cache) else cache
+        out = decode_attend(q, kv, positions, window=cfg.sliding_window)
     else:
         cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
-        out = blockwise_attention(q, cache["k"], cache["v"], positions,
-                                  cache["pos"], causal=True,
+        kv = paged_view(cache) if is_paged(cache) else cache
+        out = blockwise_attention(q, kv["k"], kv["v"], positions,
+                                  kv["pos"], causal=True,
                                   window=cfg.sliding_window)
     out = out.reshape(b, s, h * hd)
     out = linear_apply(params["o"], out, backend=backend)
@@ -469,7 +586,8 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
 
     if cache is not None:
         cache = cache_insert(cache, {"ckv": ckv, "krope": krope}, cache_at)
-        ckv_all, krope_all, kpos = cache["ckv"], cache["krope"], cache["pos"]
+        kv = paged_view(cache) if is_paged(cache) else cache
+        ckv_all, krope_all, kpos = kv["ckv"], kv["krope"], kv["pos"]
     else:
         ckv_all, krope_all, kpos = ckv, krope, positions
 

@@ -26,7 +26,8 @@ from repro.models import transformer as tfm
 from repro.models.layers import (embed_desc, embed_apply, norm_desc,
                                  norm_apply, unembed_apply)
 from repro.models.module import (ParamDesc, abstract_params, init_params,
-                                 logical_axes, param_count)
+                                 logical_axes, param_count,
+                                 tree_map_with_path)
 
 
 class Model:
@@ -105,14 +106,41 @@ class Model:
     def abstract_cache(self, batch: int, length: int):
         return abstract_params(self.cache_desc(batch, length))
 
+    def paged_cache_desc(self, batch: int, num_blocks: int, block_size: int,
+                         max_blocks_per_seq: int):
+        """Paged KV cache: per-layer block pools shared across sequences
+        plus a [batch, max_blocks_per_seq] block table per layer (all
+        layers carry the same table values; see serve.paging).
+
+        Only attention-only decoders page: SSM states are O(1) per
+        sequence (nothing to page) and encoder-decoder cross-KV is a
+        fixed per-row reservation.
+        """
+        cfg = self.cfg
+        if cfg.is_encdec or any(cfg.layer_kind(i) != "attn"
+                                for i in range(cfg.n_layers)):
+            raise ValueError("paged cache supports attention-only decoders")
+        stack = tfm.stack_desc_tree(cfg, cross=False)
+        return tfm.map_stack(
+            stack,
+            lambda i: {"self": attn.paged_cache_desc(
+                cfg, batch, num_blocks, block_size, max_blocks_per_seq)},
+            cfg)
+
+    def init_paged_cache(self, batch: int, num_blocks: int, block_size: int,
+                         max_blocks_per_seq: int):
+        cache = init_params(jax.random.PRNGKey(0), self.paged_cache_desc(
+            batch, num_blocks, block_size, max_blocks_per_seq))
+        return self._blank_pos(cache)
+
     @staticmethod
     def _blank_pos(cache):
-        """Set every 'pos' buffer to -1 (empty slots)."""
+        """Set every 'pos' / 'block_tables' buffer to -1 (empty)."""
         def fix(path, leaf):
-            if path and path[-1] == "pos":
+            if path and path[-1] in ("pos", "block_tables"):
                 return jnp.full_like(leaf, -1)
             return leaf
-        return _tree_map_with_path(fix, cache)
+        return tree_map_with_path(fix, cache)
 
     # ------------------------------------------------------------------
     # forward paths
@@ -121,21 +149,31 @@ class Model:
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
-        positions = start_pos + jnp.arange(s, dtype=jnp.int32)[None]
-        positions = jnp.broadcast_to(positions, (b, s))
+        start = jnp.asarray(start_pos, jnp.int32)
+        if start.ndim == 0:
+            start = jnp.broadcast_to(start, (b,))
+
+        def pos_for(length):
+            return start[:, None] + jnp.arange(length, dtype=jnp.int32)[None]
+
+        positions = pos_for(s)
         if "patch_embeds" in batch:                      # VLM stub frontend
             p = batch["patch_embeds"].shape[1]
             x_txt = embed_apply(params["embed"], tokens)
             x = jnp.concatenate(
                 [batch["patch_embeds"].astype(x_txt.dtype), x_txt], axis=1)
             s = x.shape[1]
-            positions = start_pos + jnp.arange(s, dtype=jnp.int32)[None]
-            positions = jnp.broadcast_to(positions, (b, s))
+            positions = pos_for(s)
             if cfg.pos == "learned":
-                x = x + jnp.take(params["embed"]["pos"], positions[0], axis=0)
+                x = x + jnp.take(params["embed"]["pos"],
+                                 jnp.maximum(positions, 0), axis=0)
             return x, positions
+        # per-row positions (ragged serving batches); negative positions
+        # mark masked left-pads — clamp the table lookup, the attention
+        # pos-mask hides the garbage row
         x = embed_apply(params["embed"], tokens,
-                        positions[0] if cfg.pos == "learned" else None)
+                        jnp.maximum(positions, 0)
+                        if cfg.pos == "learned" else None)
         return x, positions
 
     def encode(self, params, frames):
@@ -197,20 +235,48 @@ class Model:
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-    def prefill(self, params, batch: dict, cache):
+    def prefill(self, params, batch: dict, cache, start_pos=0):
         """Run the prompt through the stack, filling the cache.
 
-        Returns (last-token logits [B, V], cache).
+        ``start_pos`` (scalar or [B]) is the absolute position of the
+        first token; a *negative* start marks left-pads — they get
+        positions < 0, which the attention pos-mask hides and the cache
+        insert treats as dead writes, so padded prompts score exactly
+        like unpadded ones.  Returns (last-token logits [B, V], cache).
         """
         cfg = self.cfg
         enc_out = None
         if cfg.is_encdec:
             enc_out = self.encode(params, batch["frames"])
-        x, positions = self._embed(params, batch)
+        x, positions = self._embed(params, batch, start_pos)
         x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
-                                   caches=cache, cache_at=jnp.int32(0),
+                                   caches=cache,
+                                   cache_at=positions[:, 0],
                                    enc_out=enc_out, backend=cfg.gemm_backend)
         x = norm_apply(params["final_norm"], x[:, -1:])
+        logits = unembed_apply(params["embed"], x,
+                               backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
+        return logits, cache
+
+    def prefill_chunk(self, params, batch: dict, cache, start_pos, last_idx):
+        """One chunk of a chunked prefill: tokens [B, C] at absolute
+        positions ``start_pos + [0, C)``, writing straight into the
+        (typically paged) cache and attending over everything cached so
+        far.  ``last_idx`` [B] selects the row's last *real* token
+        (chunks are right-padded to a length bucket; padded positions
+        are dead writes).  Returns (logits at last_idx [B, V], cache).
+        """
+        cfg = self.cfg
+        x, positions = self._embed(params, batch, start_pos)
+        x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
+                                   caches=cache, cache_at=positions[:, 0],
+                                   backend=cfg.gemm_backend)
+        b = x.shape[0]
+        idx = jnp.asarray(last_idx, jnp.int32)
+        if idx.ndim == 0:
+            idx = jnp.broadcast_to(idx, (b,))
+        x = x[jnp.arange(b), idx][:, None]               # [B, 1, d]
+        x = norm_apply(params["final_norm"], x)
         logits = unembed_apply(params["embed"], x,
                                backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
         return logits, cache
@@ -225,7 +291,8 @@ class Model:
             pos_arr = jnp.broadcast_to(pos_arr, (b,))
         positions = pos_arr[:, None]
         x = embed_apply(params["embed"], tokens,
-                        positions[0] if cfg.pos == "learned" else None)
+                        jnp.maximum(positions, 0)
+                        if cfg.pos == "learned" else None)
         x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
                                    caches=cache, cache_at=pos_arr,
                                    backend=cfg.gemm_backend)
@@ -233,14 +300,3 @@ class Model:
         logits = unembed_apply(params["embed"], x,
                                backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
         return logits, cache
-
-
-def _tree_map_with_path(fn, tree, path=()):
-    if isinstance(tree, dict):
-        return {k: _tree_map_with_path(fn, v, path + (k,))
-                for k, v in tree.items()}
-    if isinstance(tree, (list, tuple)):
-        t = [_tree_map_with_path(fn, v, path + (i,))
-             for i, v in enumerate(tree)]
-        return type(tree)(t)
-    return fn(path, tree)

@@ -97,3 +97,15 @@ def param_bytes(tree) -> int:
         if is_desc(d):
             total += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
     return total
+
+
+def tree_map_with_path(fn, tree, path=()):
+    """tree_map over dict/list/tuple trees, calling ``fn(path, leaf)``
+    with the tuple of keys/indices leading to each leaf."""
+    if isinstance(tree, dict):
+        return {k: tree_map_with_path(fn, v, path + (k,))
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(tree_map_with_path(fn, v, path + (i,))
+                          for i, v in enumerate(tree))
+    return fn(path, tree)

@@ -1,19 +1,30 @@
-"""Batched serving engine: continuous batching over a fixed slot grid.
+"""Serving engines: paged continuous batching (primary) and the
+fixed-slot contiguous engine (reference / fallback).
 
-The unit of work is a *slot* (row of the KV cache).  Requests join free
-slots; one jit'd ``decode_step`` advances every active slot each tick
-(per-row positions — ``cache_insert`` takes a [B] position vector, so
-slots at different depths coexist).  Prefill runs per-request through the
-jit'd ``prefill`` on a dedicated length-bucketed batch to bound
-recompilation.
+``PagedServeEngine`` is the production shape: KV lives in a shared block
+pool (``serve/paging.py``), a scheduler (``serve/scheduler.py``) admits
+FCFS by free-block budget, prefill runs in bucket-sized chunks written
+straight into the pool, decode and prefill interleave every tick, the
+pool preempts-by-recompute when it runs dry, and per-token streaming
+callbacks plus ``serve/metrics.py`` telemetry come for free.  Capacity
+is bounded by *actual tokens held*, not worst-case reservations — the
+whole point of paging.
 
-Works with dense or BCQ-quantized params transparently (the model's
-``gemm_backend`` decides the execution path) — this is the deployment
-shape of the paper's engine: weight-only-quantized LLM decode.
+``ServeEngine`` keeps the contiguous fixed-slot design: every request
+reserves a full ``cache_len`` row.  It is the equivalence oracle for the
+paged engine (greedy outputs must match token-for-token) and still
+serves models the paged cache doesn't cover (SSM/hybrid, enc-dec,
+sliding-window).
+
+Both work with dense or BCQ-quantized params transparently (the model's
+``gemm_backend`` decides the execution path) — the deployment shape of
+the paper's engine: weight-only-quantized LLM decode.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Callable, Optional
 
 import jax
@@ -21,6 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serve.metrics import ServeMetrics
+from repro.serve.paging import BlockPool, set_block_tables
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -31,9 +45,200 @@ class Request:
     temperature: float = 0.0      # 0 => greedy
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    on_token: Optional[Callable] = None   # streaming: fn(token, request)
+    error: Optional[str] = None           # "too_long" | "oom" | None
+
+
+def _emit(req: Request, tok: int) -> None:
+    req.out_tokens.append(int(tok))
+    if req.on_token is not None:
+        req.on_token(int(tok), req)
+
+
+def _pretune(model: Model, params, batch_sizes, verbose: bool = True):
+    """Warm the repro.tune cache for every quantized GEMM a serving
+    engine will launch (decode = active-row batches, prefill = bucket
+    rows) so the first ticks hit tuned configs instead of the heuristic.
+    No-op for dense params or non-Pallas backends."""
+    from repro import tune as tune_mod
+    from repro.core import lut_gemm as core_lg
+    kernel = {"lut_pallas": "lut_gemm",
+              "mxu_pallas": "bcq_matmul"}.get(model.cfg.gemm_backend)
+    if kernel is None or not tune_mod.collect_bcq_specs(params):
+        return
+    # interpret mode (CPU smoke): small reps + truncated space so
+    # pretune stays a warm-up, not a benchmark run
+    extra = dict(reps=2, warmup=1, max_candidates=8) if core_lg.INTERPRET else {}
+    tune_mod.pretune_params(params, kernels=(kernel,),
+                            batch_sizes=sorted(set(batch_sizes)),
+                            dtype=jnp.dtype(model.cfg.dtype),
+                            verbose=verbose, **extra)
+
+
+def supports_paging(cfg) -> bool:
+    """Whether a config can serve through the paged engine: attention-only
+    decoder, no sliding window (ring caches are already fixed-size), no
+    encoder-decoder cross-KV (a fixed per-row reservation)."""
+    return (not cfg.is_encdec and not cfg.sliding_window
+            and all(cfg.layer_kind(i) == "attn"
+                    for i in range(cfg.n_layers)))
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV cache.
+
+    ``num_blocks`` x ``block_size`` KV slots are shared by up to
+    ``max_batch`` concurrent sequences; each sequence holds only the
+    blocks its tokens actually occupy, so total admitted context can
+    exceed ``max_batch`` worst-case reservations by the pool ratio.
+    """
+
+    def __init__(self, model: Model, params, *, num_blocks: int = 64,
+                 block_size: int = 16, max_batch: int = 8,
+                 max_seq_len: int = 0, prefill_buckets=(32, 128, 512),
+                 rng_seed: int = 0, pretune: bool = False,
+                 clock=time.perf_counter):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.buckets = sorted(prefill_buckets)
+        max_seq_len = max_seq_len or model.cfg.max_seq_len
+        self.max_blocks_per_seq = -(-max_seq_len // block_size)
+        if pretune:
+            _pretune(model, params, [1, max_batch, *self.buckets])
+        self.cache = model.init_paged_cache(max_batch, num_blocks,
+                                            block_size,
+                                            self.max_blocks_per_seq)
+        self.pool = BlockPool(num_blocks, block_size)
+        self.sched = Scheduler(self.pool, rows=max_batch,
+                               buckets=self.buckets,
+                               max_blocks_per_seq=self.max_blocks_per_seq)
+        self.metrics = ServeMetrics(clock)
+        self.tables = np.full((max_batch, self.max_blocks_per_seq), -1,
+                              np.int32)
+        self.rng = np.random.default_rng(rng_seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_chunk = jax.jit(model.prefill_chunk)
+        self.ticks = 0
+        self.finished: list = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.metrics.on_submit(req.uid)
+        self.sched.submit(req)
+
+    def _sync_tables(self) -> None:
+        self.tables.fill(-1)
+        for seq in self.sched.running:
+            self.tables[seq.row, :len(seq.table)] = seq.table
+
+    def _retire(self, seq) -> None:
+        self.sched.finish(seq)
+        seq.req.done = True
+        self.finished.append(seq.req)
+        if seq.req.error:                     # e.g. "oom": truncated output
+            self.metrics.on_fail(seq.req.uid)
+        else:
+            self.metrics.on_complete(seq.req.uid)
+
+    def _emit_token(self, seq, tok: int) -> None:
+        _emit(seq.req, tok)
+        self.metrics.on_token(seq.req.uid)
+        if len(seq.req.out_tokens) >= seq.req.max_new_tokens \
+                or seq.kv_len + 1 >= self.max_blocks_per_seq * self.block_size:
+            self._retire(seq)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One tick: plan (admit / top-up / preempt), then run one decode
+        batch and at most one prefill chunk."""
+        plan = self.sched.plan_tick()
+        for req in plan.rejected:
+            self.metrics.on_reject(req.uid)
+            self.finished.append(req)
+        for seq in plan.admitted:
+            self.metrics.on_admit(seq.req.uid)
+        for seq in plan.preempted:
+            self.metrics.on_preempt(seq.req.uid)
+        for seq in plan.failed:          # pool too dry even after preemption
+            self._retire(seq)
+        self._sync_tables()
+
+        if plan.decode:
+            tables = self.tables.copy()
+            rows = {seq.row for seq in plan.decode}
+            for r in range(self.max_batch):
+                if r not in rows:
+                    tables[r] = -1       # idle rows write to the trash block
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            posv = np.zeros(self.max_batch, np.int32)
+            for seq in plan.decode:
+                # during decode len(tokens) == kv_len + 1, so the pending
+                # input is always the last sampled token (seq.tokens would
+                # rebuild the whole prompt+output list every tick)
+                tokens[seq.row, 0] = seq.req.out_tokens[-1]
+                posv[seq.row] = seq.kv_len
+            cache = set_block_tables(self.cache, tables)
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), cache, jnp.asarray(posv))
+            logits = np.asarray(logits)
+            for seq in plan.decode:
+                seq.kv_len += 1
+                tok = _sample(logits[seq.row], seq.req.temperature, self.rng)
+                self._emit_token(seq, tok)
+
+        if plan.prefill is not None:
+            seq, start = plan.prefill.seq, plan.prefill.start
+            clen = plan.prefill.length
+            bucket = self.sched.bucket(clen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :clen] = seq.tokens[start:start + clen]
+            cache = set_block_tables(self.cache,
+                                     self.tables[seq.row:seq.row + 1])
+            logits, self.cache = self._prefill_chunk(
+                self.params, {"tokens": jnp.asarray(toks)}, cache,
+                jnp.int32(start), jnp.int32(clen - 1))
+            self.metrics.on_prefill_chunk()
+            seq.kv_len += clen
+            if seq.kv_len >= seq.prefill_target:
+                tok = _sample(np.asarray(logits)[0], seq.req.temperature,
+                              self.rng)
+                self._emit_token(seq, tok)
+
+        self.ticks += 1
+        self.metrics.on_tick(self.pool.occupancy(), self.sched.active)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list, max_ticks: int = 1000) -> list:
+        for req in requests:
+            self.submit(req)
+        while self.sched.has_work() and self.ticks < max_ticks:
+            self.step()
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# contiguous fixed-slot engine (reference / fallback)
+# ---------------------------------------------------------------------------
 
 
 class ServeEngine:
+    """Continuous batching over a fixed slot grid (one full ``cache_len``
+    row per request).  The unit of work is a *slot*; one jit'd
+    ``decode_step`` advances every active slot each tick.  Prefill runs
+    per-request through a throwaway 1-row cache spliced into the grid;
+    left-pads get negative positions, so the attention pos-mask makes
+    padded prompts score exactly like unpadded ones in attention layers.
+    (SSM layers have no position mask — pad embeddings still enter the
+    conv/SSD state there, a documented residual simplification for the
+    SSM/hybrid models this engine remains the fallback for.)"""
+
     def __init__(self, model: Model, params, *, slots: int = 8,
                  cache_len: int = 512, prefill_buckets=(32, 128, 512),
                  rng_seed: int = 0, pretune: bool = False):
@@ -43,7 +248,7 @@ class ServeEngine:
         self.cache_len = cache_len
         self.buckets = sorted(prefill_buckets)
         if pretune:
-            self._pretune()
+            _pretune(model, params, [1, slots, *self.buckets])
         self.cache = model.init_cache(slots, cache_len)
         self.slot_req: list = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
@@ -53,33 +258,12 @@ class ServeEngine:
         self.ticks = 0
 
     # ------------------------------------------------------------------
-    def _pretune(self):
-        """Warm the repro.tune cache for every quantized GEMM this engine
-        will launch — decode steps run b = active-slot rows, prefill runs
-        b = prompt-bucket rows — in the model's activation dtype, so the
-        first serving ticks hit tuned configs instead of the heuristic.
-        No-op for dense params or non-Pallas backends."""
-        from repro import tune as tune_mod
-        from repro.core import lut_gemm as core_lg
-        kernel = {"lut_pallas": "lut_gemm",
-                  "mxu_pallas": "bcq_matmul"}.get(self.model.cfg.gemm_backend)
-        if kernel is None or not tune_mod.collect_bcq_specs(self.params):
-            return
-        # interpret mode (CPU smoke): small reps + truncated space so
-        # pretune stays a warm-up, not a benchmark run
-        extra = dict(reps=2, warmup=1, max_candidates=8) if core_lg.INTERPRET else {}
-        batches = sorted({1, self.slots, *self.buckets})
-        tune_mod.pretune_params(self.params, kernels=(kernel,),
-                                batch_sizes=batches,
-                                dtype=jnp.dtype(self.model.cfg.dtype),
-                                verbose=True, **extra)
-
-    # ------------------------------------------------------------------
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
             if n <= b:
                 return b
-        return self.buckets[-1]
+        top = self.buckets[-1]          # longer prompts: round up to the
+        return -(-n // top) * top       # top bucket (bounded trace count)
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -89,32 +273,43 @@ class ServeEngine:
         free = self._free_slots()
         if not free:
             return False
-        slot = free[0]
         plen = len(req.prompt)
+        if plen == 0:
+            req.error = "empty_prompt"
+            req.done = True
+            return True
+        if plen >= self.cache_len - 1:       # can't hold prompt + 1 decode
+            req.error = "too_long"           # reject, don't silently truncate
+            req.done = True
+            return True
+        slot = free[0]
         bucket = self._bucket(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, -plen:] = req.prompt          # left-pad into the bucket
-        # run prefill on a single-row cache then splice into the big cache
+        # run prefill on a single-row cache then splice into the big cache;
+        # start_pos < 0 gives the pads negative positions -> masked out of
+        # attention and dead on insert (real tokens sit at 0..plen-1)
         small = self.model.init_cache(1, self.cache_len)
         logits, small = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, small)
+            self.params, {"tokens": jnp.asarray(toks)}, small,
+            jnp.int32(plen - bucket))
         self.cache = _splice_cache(self.cache, small, slot)
-        # note: left-padding means positions 0..bucket-1 with pad tokens at
-        # the start; harmless for causal decode (pads are attended but
-        # carry learned-nothing embeddings on random prompts; production
-        # would mask pads — documented simplification).
         first = _sample(np.asarray(logits)[0], req.temperature, self.rng)
-        req.out_tokens.append(int(first))
+        _emit(req, first)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True                   # one-token request: slot stays free
+            return True
         self.slot_req[slot] = req
-        self.slot_pos[slot] = bucket
+        self.slot_pos[slot] = plen
         return True
 
     # ------------------------------------------------------------------
-    def tick(self):
-        """One decode step for every active slot."""
+    def tick(self) -> list:
+        """One decode step for every active slot; returns requests that
+        retired this tick."""
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return
+            return []
         tokens = np.zeros((self.slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slot_req[i].out_tokens[-1]
@@ -122,29 +317,34 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), self.cache,
             jnp.asarray(self.slot_pos))
         logits = np.asarray(logits)
+        retired = []
         for i in active:
             req = self.slot_req[i]
             tok = _sample(logits[i], req.temperature, self.rng)
-            req.out_tokens.append(int(tok))
+            _emit(req, tok)
             self.slot_pos[i] += 1
             if len(req.out_tokens) >= req.max_new_tokens \
                     or self.slot_pos[i] >= self.cache_len - 1:
                 req.done = True
+                retired.append(req)
                 self.slot_req[i] = None
         self.ticks += 1
+        return retired
 
     def run(self, requests: list, max_ticks: int = 1000) -> list:
         """Continuous batching: admit when slots free, tick until done."""
-        pending = list(requests)
+        pending = deque(requests)
         done = []
         while (pending or any(r is not None for r in self.slot_req)) \
                 and self.ticks < max_ticks:
             while pending and self._free_slots():
-                if not self.add_request(pending[0]):
+                req = pending[0]
+                if not self.add_request(req):
                     break
-                pending.pop(0)
-            self.tick()
-            done = [r for r in requests if r.done]
+                pending.popleft()
+                if req.done:
+                    done.append(req)
+            done.extend(self.tick())
         return done
 
 
@@ -157,6 +357,14 @@ def _sample(logits: np.ndarray, temperature: float, rng) -> int:
 
 
 def _splice_cache(big, small, slot: int):
-    """Copy a 1-row cache into row ``slot`` of the engine cache."""
-    return jax.tree_util.tree_map(
-        lambda b, s: b.at[slot:slot + 1].set(s.astype(b.dtype)), big, small)
+    """Copy a 1-row cache into row ``slot`` of the engine cache.
+
+    Leaves under a "scan" group are stacked with a leading layers axis,
+    so their batch dim is axis 1, not axis 0."""
+    def fix(path, b, s):
+        stacked = any(isinstance(k, jax.tree_util.DictKey) and k.key == "scan"
+                      for k in path)
+        if stacked:
+            return b.at[:, slot:slot + 1].set(s.astype(b.dtype))
+        return b.at[slot:slot + 1].set(s.astype(b.dtype))
+    return jax.tree_util.tree_map_with_path(fix, big, small)

@@ -1,0 +1,137 @@
+"""Serving telemetry: latency histograms + engine counters.
+
+No dependencies beyond numpy.  The engine feeds events through the
+``on_*`` hooks with timestamps from an injectable clock (tests pass a
+fake clock for determinism); ``summary()`` renders the numbers the
+acceptance criteria ask for — TTFT, per-token latency, throughput and
+pool occupancy — and ``to_json`` persists them (uploaded as a CI
+artifact by ``benchmarks/bench_serve.py``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class Histogram:
+    """Log-bucketed latency histogram (seconds) that also keeps a capped
+    sample reservoir so percentiles stay exact for short runs and
+    unbiased (uniform reservoir sampling) for long ones."""
+
+    def __init__(self, max_samples: int = 4096):
+        # 100ns .. 100s in half-decade buckets
+        self.bounds = np.logspace(-7, 2, 19)
+        self.counts = np.zeros(len(self.bounds) + 1, np.int64)
+        self.total = 0.0
+        self.n = 0
+        self._samples: List[float] = []
+        self._max_samples = max_samples
+        self._rng = np.random.default_rng(0)
+
+    def observe(self, v: float) -> None:
+        self.counts[np.searchsorted(self.bounds, v)] += 1
+        self.total += v
+        self.n += 1
+        if len(self._samples) < self._max_samples:
+            self._samples.append(v)
+        else:                    # classic reservoir: keep each of the n
+            j = int(self._rng.integers(0, self.n))   # seen w.p. k/n
+            if j < self._max_samples:
+                self._samples[j] = v
+
+    def percentile(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), q))
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"n": self.n, "mean": self.mean,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "max": self.percentile(100)}
+
+
+class ServeMetrics:
+    """Per-engine counters + TTFT / inter-token latency / occupancy."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self.ttft = Histogram()
+        self.per_token = Histogram()
+        self.counters = {"submitted": 0, "admitted": 0, "completed": 0,
+                         "failed": 0, "preempted": 0, "rejected": 0,
+                         "tokens_out": 0, "prefill_chunks": 0, "ticks": 0}
+        self.occupancy: List[float] = []       # one sample per tick
+        self.active: List[int] = []            # concurrent running seqs
+        self._t_submit: Dict[int, float] = {}
+        self._t_last_tok: Dict[int, float] = {}
+        self._t0 = clock()
+
+    # ------------------------------------------------------------------
+    def on_submit(self, uid: int) -> None:
+        self.counters["submitted"] += 1
+        self._t_submit[uid] = self.clock()
+
+    def on_admit(self, uid: int) -> None:
+        self.counters["admitted"] += 1
+
+    def on_reject(self, uid: int) -> None:
+        self.counters["rejected"] += 1
+
+    def on_preempt(self, uid: int) -> None:
+        self.counters["preempted"] += 1
+
+    def on_token(self, uid: int) -> None:
+        now = self.clock()
+        if uid not in self._t_last_tok:           # first token: TTFT
+            self.ttft.observe(now - self._t_submit.get(uid, self._t0))
+        else:
+            self.per_token.observe(now - self._t_last_tok[uid])
+        self._t_last_tok[uid] = now
+        self.counters["tokens_out"] += 1
+
+    def on_complete(self, uid: int) -> None:
+        self.counters["completed"] += 1
+
+    def on_fail(self, uid: int) -> None:
+        """Retired with an error (e.g. pool OOM truncation)."""
+        self.counters["failed"] += 1
+
+    def on_tick(self, occupancy: float, active: int) -> None:
+        self.counters["ticks"] += 1
+        self.occupancy.append(float(occupancy))
+        self.active.append(int(active))
+
+    def on_prefill_chunk(self) -> None:
+        self.counters["prefill_chunks"] += 1
+
+    # ------------------------------------------------------------------
+    def throughput(self) -> float:
+        dt = self.clock() - self._t0
+        return self.counters["tokens_out"] / dt if dt > 0 else 0.0
+
+    def summary(self) -> Dict:
+        occ = np.asarray(self.occupancy) if self.occupancy else np.zeros(1)
+        act = np.asarray(self.active) if self.active else np.zeros(1)
+        return {
+            "counters": dict(self.counters),
+            "ttft_s": self.ttft.summary(),
+            "per_token_s": self.per_token.summary(),
+            "throughput_tok_s": self.throughput(),
+            "occupancy": {"mean": float(occ.mean()),
+                          "peak": float(occ.max())},
+            "peak_active": int(act.max()),
+        }
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.summary(), indent=2, sort_keys=True)
+        if path:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s

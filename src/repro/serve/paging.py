@@ -1,0 +1,124 @@
+"""Paged KV cache: fixed-size blocks in a shared pool + per-sequence
+block tables.
+
+The device side lives in ``models/attention.py`` (``paged_view`` /
+``cache_insert``'s paged branch): every per-layer cache buffer is shaped
+``[num_blocks, block_size, ...]`` and a ``block_tables`` leaf ``[B,
+max_blocks_per_seq]`` maps each sequence's logical blocks to physical
+pool blocks (-1 = unallocated).  This module is the *host* side: a free
+list allocator with double-booking checks, plus helpers to push updated
+block tables into a cache tree.
+
+Physical block 0 is reserved as the trash block: writes whose target is
+out of range or unallocated (right-padded prefill chunks, idle batch
+rows) are routed there by the device-side insert, and the view masks any
+slot reached through a -1 table entry — so the trash block's contents
+are never observable.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.models.module import tree_map_with_path
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` KV entries."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockPool:
+    """Free-list allocator over the shared block pool (host bookkeeping).
+
+    Block 0 is reserved (trash); ``capacity`` counts usable blocks only.
+    Every alloc/free is checked against an owner map so a block can never
+    be double-booked or double-freed — the invariant the paged cache's
+    correctness rests on.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(1, num_blocks))
+        self._owner: Dict[int, object] = {}          # block -> owner tag
+
+    # ------------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (excludes the reserved trash block)."""
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.capacity - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.used_blocks / self.capacity
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    # ------------------------------------------------------------------
+    def alloc(self, owner, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` blocks for ``owner``; None if insufficient
+        (all-or-nothing, so a partial grab never strands blocks)."""
+        if n > len(self._free):
+            return None
+        out = []
+        for _ in range(n):
+            b = self._free.popleft()
+            assert b not in self._owner, f"double-booked block {b}"
+            assert b != 0, "trash block leaked into the free list"
+            self._owner[b] = owner
+            out.append(b)
+        return out
+
+    def free(self, blocks: List[int], owner) -> None:
+        for b in blocks:
+            got = self._owner.pop(b, None)
+            assert got is not None, f"double-free of block {b}"
+            assert got == owner, f"block {b} owned by {got}, freed by {owner}"
+            self._free.append(b)
+
+    def owned_by(self, owner) -> List[int]:
+        return [b for b, o in self._owner.items() if o == owner]
+
+    def check(self) -> None:
+        """Assert the pool's books balance (used in tests after every run)."""
+        assert len(self._free) + len(self._owner) == self.capacity
+        assert not (set(self._free) & set(self._owner))
+
+
+# ---------------------------------------------------------------------------
+# cache-tree helpers
+# ---------------------------------------------------------------------------
+
+
+def set_block_tables(cache, tables):
+    """Return ``cache`` with every ``block_tables`` leaf set to ``tables``.
+
+    ``tables``: int32 [B, max_blocks_per_seq] (np or jnp).  Scan-stacked
+    layer caches carry a leading layers axis on every leaf; the tables
+    are broadcast across it (all layers share one block table).
+    """
+    tables = jnp.asarray(tables, jnp.int32)
+
+    def fix(path, leaf):
+        if path and path[-1] == "block_tables":
+            if leaf.ndim == tables.ndim + 1:          # scan-stacked layers
+                # batch may differ from the leaf's (single-row prefill
+                # slices), so rebuild the shape from the new tables
+                return jnp.broadcast_to(tables[None],
+                                        (leaf.shape[0], *tables.shape))
+            return tables
+        return leaf
+    return tree_map_with_path(fix, cache)
