@@ -17,7 +17,8 @@ from benchmarks import common
 from repro.core import energy_model as em
 from repro.core.mixed_precision import allocate_bits, average_bits
 from repro.models import Model
-from repro.quantize import quantize_model, collect_linears
+from repro.quant import QuantSpec, quantize_model
+from repro.quantize import collect_linears
 from repro.quantize.optq import capture_calibration, optq_quantize_model
 
 
@@ -39,8 +40,8 @@ def run():
     # evaluates FIGNA with OPTQ
     for bits in (2, 3, 4):
         eff = em.model_report("FIGNA", "opt-6.7b", B=32, q=bits).tops_per_w
-        qp = quantize_model(params, model.axes(), bits=bits, method="rtn",
-                            group_size=gs)
+        qp, _ = quantize_model(params, QuantSpec(format="rtn", bits=bits,
+                                                 group_size=gs), model.axes())
         rows.append((f"FIGNA-RTN-Q{bits}", bits,
                      common.perplexity(m_q, qp), eff))
         qp = optq_quantize_model(params, model.axes(),
@@ -51,19 +52,19 @@ def run():
 
     # non-uniform BCQ at 2/3/4 bits (ShiftAddLLM-class -> FIGLUT)
     for bits in (2, 3, 4):
-        qp = quantize_model(params, model.axes(), bits=bits, method="bcq",
-                            group_size=gs, iters=4)
+        qp, _ = quantize_model(params, QuantSpec(bits=bits, group_size=gs,
+                                                 iters=4), model.axes())
         ppl = common.perplexity(m_q, qp)
         eff = em.model_report("FIGLUT-I", "opt-6.7b", B=32, q=bits).tops_per_w
         rows.append((f"FIGLUT-BCQ-Q{bits}", bits, ppl, eff))
 
     # mixed precision averaging ~2.4 bits
-    lin = collect_linears(params)
+    lin = collect_linears(params, model.axes())
     bit_map = allocate_bits(lin, target_avg_bits=2.4, candidates=(2, 3, 4),
-                            group_size=gs)
+                            group_size=gs)  # lin is axes-filtered above
     avg = average_bits(bit_map, lin)
-    qp = quantize_model(params, model.axes(), bits=2, method="bcq",
-                        group_size=gs, iters=4, bit_map=bit_map)
+    qp, _ = quantize_model(params, QuantSpec(bits=2, group_size=gs, iters=4,
+                                             overrides=bit_map), model.axes())
     ppl = common.perplexity(m_q, qp)
     eff = em.model_report("FIGLUT-I", "opt-6.7b", B=32, q=avg).tops_per_w
     rows.append((f"FIGLUT-BCQ-Q{avg:.2f}(mixed)", avg, ppl, eff))

@@ -20,7 +20,7 @@ import numpy as np
 from benchmarks import common
 from repro.configs import get_reduced
 from repro.models import Model
-from repro.quantize import quantize_model
+from repro.quant import QuantSpec, quantize_model
 from repro.serve import PagedServeEngine, Request
 
 
@@ -76,9 +76,9 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
     params = model.init(jax.random.PRNGKey(0))
     rows = [bench_backend("dense", model, params, cfg,
                           requests=requests, max_new=max_new)]
-    qparams = quantize_model(params, model.axes(), bits=bits, method="bcq",
-                             group_size=32, iters=2)
-    model_q = Model(cfg.replace(gemm_backend="bcq_xla"))
+    spec = QuantSpec(bits=bits, group_size=32, iters=2, backend="bcq_xla")
+    qparams, _ = quantize_model(params, spec, model.axes())
+    model_q = Model(cfg.replace(quant=spec))
     rows.append(bench_backend(f"bcq{bits}", model_q, qparams, cfg,
                               requests=requests, max_new=max_new))
     # both backends must serve the full stream through the paged engine

@@ -17,7 +17,7 @@ from repro.core.lut_gemm import bcq_xla_matmul, bcq_xla_matmul_fused
 from repro.core.prealign import prealigned_bcq_matmul
 from repro.kernels.lut_gemm import ref as lref
 from repro.models import Model
-from repro.quantize import quantize_model
+from repro.quant import QuantSpec, quantize_model
 
 
 def gemm_rows():
@@ -47,8 +47,8 @@ def run():
     model, params = common.tiny_lm()
     ppl_fp = common.perplexity(model, params)
 
-    qparams = quantize_model(params, model.axes(), bits=4, method="rtn",
-                             group_size=64)
+    qparams, _ = quantize_model(params, QuantSpec(format="rtn", bits=4,
+                                                  group_size=64), model.axes())
     m_f = Model(model.cfg.replace(gemm_backend="bcq_xla"))
     ppl_f = common.perplexity(m_f, qparams)
 

@@ -8,9 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.mixed_precision import allocate_bits, average_bits
 from repro.models import Model
-from repro.quantize import quantize_model, collect_linears
+from repro.quant import QuantSpec, quantize_model
 
 
 def main():
@@ -21,30 +20,25 @@ def main():
     batch = {"tokens": jnp.array(rng.integers(0, cfg.vocab_size, (4, 64)))}
     loss_fp = float(model.loss_fn(params, batch))
 
-    lin = collect_linears(params)
-    bit_map = allocate_bits(lin, target_avg_bits=2.4, candidates=(2, 3, 4),
-                            group_size=32)
-    avg = average_bits(bit_map, lin)
-    print(f"[mixed] allocated {len(bit_map)} layers, avg {avg:.2f} bits:")
-    for k, b in sorted(bit_map.items()):
-        print(f"    {b}-bit  {k}")
-
-    model_q = Model(cfg.replace(gemm_backend="bcq_xla"))
     rows = []
-    for name, kwargs in [
-        ("uniform-2bit", dict(bits=2)),
-        (f"mixed-{avg:.1f}bit", dict(bits=2, bit_map=bit_map)),
-        ("uniform-3bit", dict(bits=3)),
-        ("uniform-4bit", dict(bits=4)),
+    for name, spec in [
+        ("uniform-2bit", QuantSpec(bits=2, group_size=32, iters=3)),
+        ("mixed-2.4bit", QuantSpec(bits=2.4, group_size=32, iters=3)),
+        ("uniform-3bit", QuantSpec(bits=3, group_size=32, iters=3)),
+        ("uniform-4bit", QuantSpec(bits=4, group_size=32, iters=3)),
     ]:
-        qp = quantize_model(params, model.axes(), method="bcq", group_size=32,
-                            iters=3, **kwargs)
+        qp, manifest = quantize_model(params, spec, model.axes())
+        model_q = Model(cfg.replace(quant=spec))
         loss = float(model_q.loss_fn(qp, batch))
         rows.append((name, loss))
-        print(f"[mixed] {name:16s} loss={loss:.4f} (fp {loss_fp:.4f})")
+        print(f"[mixed] {name:16s} loss={loss:.4f} (fp {loss_fp:.4f})  "
+              f"avg {manifest.avg_plane_bits:.2f} plane-bits")
+        if name == "mixed-2.4bit":
+            for l in manifest.layers:
+                print(f"    {l['plane_bits']}-bit  {l['path']}")
     # mixed 2.4 should sit between uniform 2 and uniform 3
     d = dict(rows)
-    assert d[f"mixed-{avg:.1f}bit"] <= d["uniform-2bit"] + 1e-3
+    assert d["mixed-2.4bit"] <= d["uniform-2bit"] + 1e-3
     print("mixed_precision_demo OK")
 
 

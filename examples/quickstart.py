@@ -11,7 +11,7 @@ from repro.core.lut_gemm import bcq_apply
 from repro.kernels.lut_gemm import lut_gemm
 from repro.models import Model
 from repro.configs import get_reduced
-from repro.quantize import quantize_model
+from repro.quant import QuantSpec, quantize_model
 
 
 def main():
@@ -46,9 +46,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.array(rng.integers(0, cfg.vocab_size, (2, 32)))}
     loss_fp = float(model.loss_fn(params, batch))
-    qparams = quantize_model(params, model.axes(), bits=4, group_size=64,
-                             iters=3)
-    model_q = Model(cfg.replace(gemm_backend="bcq_xla"))
+    spec = QuantSpec(bits=4, group_size=64, iters=3, backend="bcq_xla")
+    qparams, manifest = quantize_model(params, spec, model.axes())
+    print(f"[quickstart] {manifest.summary()}")
+    model_q = Model(cfg.replace(quant=spec))
     loss_q = float(model_q.loss_fn(qparams, batch))
     print(f"model loss: fp32 {loss_fp:.4f} vs BCQ-4bit {loss_q:.4f}")
     print("quickstart OK")

@@ -13,13 +13,17 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import Model
-from repro.quantize import quantize_model
+from repro.quant import QuantSpec, quantize_model
 from repro.serve import PagedServeEngine, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--bits", type=float, default=None,
+                    help="fractional (e.g. 2.4) -> mixed precision; "
+                         "default 3 (ternary: fixed 2 planes)")
+    ap.add_argument("--format", default="bcq",
+                    choices=["bcq", "rtn", "ternary"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--arch", default="opt_6_7b")
@@ -30,12 +34,17 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     print(f"[serve] arch={cfg.name} (reduced), {model.n_params():,} params")
 
+    # explicit --bits passes through (ternary raises on a conflicting
+    # value); unset -> 3-bit, or the format default
+    bits = args.bits if args.bits is not None else \
+        (None if args.format == "ternary" else 3)
+    spec = QuantSpec(format=args.format, bits=bits, group_size=64, iters=3)
     t0 = time.time()
-    qparams = quantize_model(params, model.axes(), bits=args.bits,
-                             method="bcq", group_size=64, iters=3)
-    print(f"[serve] BCQ-{args.bits}bit quantization in {time.time()-t0:.1f}s")
+    qparams, manifest = quantize_model(params, spec, model.axes())
+    print(f"[serve] {spec.describe()} in {time.time()-t0:.1f}s")
+    print(f"[serve] {manifest.summary()}")
 
-    model_q = Model(cfg.replace(gemm_backend="bcq_xla"))
+    model_q = Model(cfg.replace(quant=spec))
     streamed = {}
 
     def on_token(tok, req):

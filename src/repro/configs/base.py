@@ -18,6 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.quant.spec import QuantSpec
+
 # ---------------------------------------------------------------------------
 # assigned shape cells
 # ---------------------------------------------------------------------------
@@ -103,8 +105,17 @@ class ModelConfig:
     max_seq_len: int = 524288
 
     # execution
-    gemm_backend: str = "dense"       # dense | bcq_xla | lut_pallas | mxu_pallas
-    quant_bits: int = 0               # 0 -> unquantized
+    quant: Optional[QuantSpec] = None  # declarative quantization spec: the
+                                      # single source of truth for format /
+                                      # bits / group / backend preference
+                                      # (repro.quant); None -> legacy knobs
+                                      # below apply
+    gemm_backend: str = "dense"       # DEPRECATED shim (one release):
+                                      # dense | bcq_xla | lut_pallas |
+                                      # mxu_pallas — superseded by
+                                      # quant.backend
+    quant_bits: int = 0               # DEPRECATED shim: 0 -> unquantized —
+                                      # superseded by quant.bits
     remat: bool = True
     scan_layers: bool = True
     kv_replication: int = 1           # replicate kv heads r-fold so the KV
@@ -118,6 +129,27 @@ class ModelConfig:
                                       # the weight-quantization insight)
 
     # ---------------------------------------------------------------
+    @property
+    def backend_preference(self) -> str:
+        """Execution-backend preference fed to the registry
+        (:mod:`repro.quant.backends`): the spec's choice when a
+        ``quant`` spec is set, else the legacy ``gemm_backend`` string.
+        "auto" lets capability negotiation pick per weight."""
+        if self.quant is not None:
+            return self.quant.backend
+        return self.gemm_backend
+
+    def quant_spec(self) -> Optional[QuantSpec]:
+        """The effective QuantSpec: the explicit field, or one synthesized
+        from the legacy ``quant_bits``/``gemm_backend`` shims (None when
+        the model is unquantized)."""
+        if self.quant is not None:
+            return self.quant
+        if self.quant_bits:
+            return QuantSpec.from_legacy(bits=self.quant_bits,
+                                         backend=self.gemm_backend)
+        return None
+
     @property
     def head_dim_(self) -> int:
         return self.head_dim or self.d_model // self.n_heads

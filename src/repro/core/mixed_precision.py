@@ -13,7 +13,11 @@ We implement the standard greedy marginal-gain allocator:
      best error-reduction per additional stored bit until the parameter-
      weighted average bit budget is exhausted.
 
-Returns {name: bits}; ``quantize_mixed`` applies it.
+Returns {name: bits}; ``quantize_mixed`` applies it.  The launch path
+reaches this through ``repro.quant``: a fractional ``QuantSpec.bits``
+(``--bits 2.4``) makes :func:`repro.quant.api.plan_bits` call
+``allocate_bits`` over every quantizable linear and the manifest reports
+the achieved average.
 """
 from __future__ import annotations
 
@@ -26,10 +30,31 @@ import numpy as np
 from repro.core import bcq as bcq_mod
 
 
+def _as_2d(w: jax.Array, max_rows: int = 0) -> jax.Array:
+    """Flatten stacked leaves ([L, out, in] / [E, f, d]) to [rows, in] and
+    optionally subsample rows with a deterministic stride — the
+    sensitivity probe is a *ranking* signal, so a few hundred rows per
+    layer suffice and keep fractional-bits allocation launch-fast."""
+    w2 = w.reshape(-1, w.shape[-1]) if w.ndim != 2 else w
+    if max_rows and w2.shape[0] > max_rows:
+        stride = -(-w2.shape[0] // max_rows)
+        w2 = w2[::stride][:max_rows]
+    return w2
+
+
 def layer_sensitivity(w: jax.Array, bits: int, group_size: int = 128,
-                      x_cal: Optional[jax.Array] = None, iters: int = 3) -> float:
-    """Quantization error of one layer at one bit-width."""
-    wq = bcq_mod.quantize(w, bits=bits, group_size=group_size, iters=iters)
+                      x_cal: Optional[jax.Array] = None, iters: int = 3,
+                      max_rows: int = 0,
+                      quantizer: Optional[Callable] = None) -> float:
+    """Quantization error of one layer at one bit-width.
+
+    ``quantizer(w2d, bits=, group_size=, iters=) -> BCQWeight`` lets the
+    probe measure the error of the format that will actually be applied
+    (repro.quant passes the registered format's quantize); default BCQ.
+    """
+    qfn = quantizer or (lambda w2, **kw: bcq_mod.quantize(w2, **kw))
+    w = _as_2d(jnp.asarray(w, jnp.float32), max_rows)
+    wq = qfn(w, bits=bits, group_size=group_size, iters=iters)
     err = bcq_mod.dequantize(wq) - w
     if x_cal is not None:
         out = jnp.einsum("...n,mn->...m", x_cal.astype(jnp.float32), err)

@@ -2,22 +2,22 @@
 
 A linear's weight leaf is either a dense ``jax.Array`` (training /
 unquantized) or a :class:`~repro.core.bcq.BCQWeight` (post-PTQ serving).
-``linear_apply`` dispatches transparently, so model code never branches on
-quantization state; the execution backend (dense / bcq_xla / lut_pallas /
-mxu_pallas) is a config knob threaded through apply.  For the Pallas
-backends the launch geometry is resolved per layer shape through
-:mod:`repro.tune` (tuned cache or heuristic) — no call site pins block
-sizes.
+``linear_apply`` hands every call to the backend *registry*
+(:mod:`repro.quant.backends`): the ``backend`` argument is a preference
+(``None``/"auto" lets the registry pick the best native path), and
+capability negotiation walks the preference's fallback chain
+(``mxu_pallas``/``lut_pallas`` -> ``bcq_xla`` -> ``dense``) per weight —
+model code never branches on quantization state or pins an executor.
+For the Pallas backends the launch geometry is resolved per layer shape
+through :mod:`repro.tune` (tuned cache or heuristic).
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bcq import BCQWeight, quantize, from_uniform
-from repro.core.lut_gemm import Backend, bcq_apply
+from repro.core.bcq import BCQWeight
 
 
 _CAPTURE = None
@@ -32,16 +32,19 @@ def set_capture(fn):
 
 
 def linear_apply(w, x: jax.Array, bias: Optional[jax.Array] = None,
-                 backend: Backend = "bcq_xla", out_dtype=None) -> jax.Array:
-    """y = x @ W^T (+ bias).  W is dense [out, in] or BCQWeight."""
+                 backend: Optional[str] = None, out_dtype=None) -> jax.Array:
+    """y = x @ W^T (+ bias).  W is dense [out, in] or BCQWeight.
+
+    ``backend``: preference name from the registry ("auto"/None, "dense",
+    "bcq_xla", "lut_pallas", "mxu_pallas", ...) — resolution and fallback
+    happen in :func:`repro.quant.backends.execute_linear`.
+    """
     if _CAPTURE is not None:
         _CAPTURE(w, x)
-    out_dtype = out_dtype or x.dtype
-    if isinstance(w, BCQWeight):
-        y = bcq_apply(x, w, backend=backend, out_dtype=out_dtype)
-    else:
-        y = jnp.einsum("...n,mn->...m", x, w.astype(x.dtype),
-                       preferred_element_type=jnp.float32).astype(out_dtype)
+    # function-level import: quant.backends imports core submodules, so a
+    # module-level import would be order-sensitive during package init
+    from repro.quant.backends import execute_linear
+    y = execute_linear(x, w, backend=backend, out_dtype=out_dtype or x.dtype)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y
@@ -49,14 +52,14 @@ def linear_apply(w, x: jax.Array, bias: Optional[jax.Array] = None,
 
 def quantize_linear(w: jax.Array, bits: int, method: str = "bcq",
                     group_size: int = 128, iters: int = 5) -> BCQWeight:
-    """Quantize one dense [out, in] weight.
+    """Quantize one dense [out, in] weight through the format registry.
 
-    method: "bcq" (alternating non-uniform, ShiftAddLLM-class) or
-            "rtn"/"uniform" (round-to-nearest mapped exactly into BCQ form —
-            what lets FIGLUT run uniformly-quantized checkpoints).
+    ``method`` is a format name ("bcq", "rtn"/"uniform", "ternary", or any
+    :func:`repro.quant.register_format` addition).  Kept as a thin shim
+    over :mod:`repro.quant.formats` for callers quantizing single
+    matrices; whole trees should use ``repro.quant.quantize_model``.
     """
-    if method == "bcq":
-        return quantize(w, bits=bits, group_size=group_size, iters=iters)
-    if method in ("rtn", "uniform"):
-        return from_uniform(w, bits=bits, group_size=group_size)
-    raise ValueError(f"unknown method {method!r}")
+    from repro.quant.formats import get_format
+    fmt = get_format(method)
+    return fmt.quantize(w, bits=fmt.plane_bits(bits), group_size=group_size,
+                        iters=iters)

@@ -1,7 +1,23 @@
-"""Production serving launcher: quantize (or load) and serve.
+"""Production serving launcher: quantize (or load pre-quantized) and serve.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
         --bits 3 --requests 16
+
+Quantization is driven by a :class:`repro.quant.QuantSpec` — built from
+the CLI flags, or loaded whole from ``--spec spec.json`` (flags override
+file fields).  Highlights:
+
+  * ``--bits 2.4`` (fractional) runs sensitivity-driven mixed precision
+    via ``core.mixed_precision.allocate_bits`` (paper Fig. 17); the
+    printed manifest reports the achieved average.
+  * ``--method ternary`` serves TWN-style {-a,0,+a} weights on the same
+    engine (2 BCQ planes).
+  * ``--bits 0`` explicitly serves the dense FP model (no silent skip).
+  * ``--save-quantized DIR`` / ``--load-quantized DIR`` persist / reuse
+    the quantized tree, so relaunches skip minutes of PTQ solver time;
+    a loaded checkpoint serves token-for-token identically to
+    quantize-at-launch.
+  * ``--manifest-json PATH`` dumps the per-layer manifest (CI artifact).
 
 Default engine is the paged-KV engine (block pool + chunked-prefill
 scheduler + streaming + metrics); ``--engine slots`` falls back to the
@@ -12,13 +28,73 @@ import argparse
 import time
 
 
+def build_spec(args):
+    """Resolve the QuantSpec from --spec JSON + CLI overrides.
+
+    Returns None for an explicitly dense serve (--bits 0 with no spec
+    file, or a spec whose bits resolve to 0).
+    """
+    from repro.quant import QuantSpec, canonical_format
+
+    if args.bits is not None and args.bits == 0:
+        # explicit dense request wins before any spec normalization
+        # (ternary would otherwise coerce bits back to its 2 planes)
+        return None
+    base = QuantSpec.load(args.spec) if args.spec else QuantSpec()
+    kw = {}
+    if args.bits is not None:
+        kw["bits"] = args.bits
+    elif args.format is not None and \
+            canonical_format(args.format) != base.format:
+        # switching format without --bits: reset to the new format's
+        # default instead of carrying the old format's bit-width over
+        # (ternary rejects any bits != 2)
+        kw["bits"] = None
+    if args.format is not None:
+        kw["format"] = args.format
+    if args.backend is not None:
+        kw["backend"] = args.backend
+    if args.group_size is not None:
+        kw["group_size"] = args.group_size
+    if args.iters is not None:
+        kw["iters"] = args.iters
+    try:
+        spec = base.replace(**kw) if kw else base
+    except ValueError as e:                  # e.g. --method ternary --bits 4
+        raise SystemExit(f"invalid quant flags: {e}")
+    return None if spec.bits == 0 else spec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt_6_7b")
     ap.add_argument("--reduced", type=int, default=1)
-    ap.add_argument("--bits", type=int, default=4)
-    ap.add_argument("--method", default="bcq", choices=["bcq", "rtn"])
-    ap.add_argument("--backend", default="bcq_xla")
+    # --- quantization spec (repro.quant) -------------------------------
+    ap.add_argument("--bits", type=float, default=None,
+                    help="weight bits; fractional (e.g. 2.4) -> mixed "
+                         "precision; 0 -> serve dense FP (default: 4)")
+    ap.add_argument("--method", "--format", dest="format", default=None,
+                    choices=["bcq", "rtn", "uniform", "ternary"],
+                    help="quant format (registry: repro.quant.formats)")
+    ap.add_argument("--backend", default=None,
+                    help="execution preference (auto | dense | bcq_xla | "
+                         "lut_pallas | mxu_pallas); capability negotiation "
+                         "falls back down the chain per weight")
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="scale group size along the input dim (default 128)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="BCQ alternating-refinement rounds (default 5)")
+    ap.add_argument("--spec", default="",
+                    help="QuantSpec JSON file; explicit flags override")
+    ap.add_argument("--save-quantized", default="",
+                    help="write the quantized params + spec/manifest to "
+                         "this checkpoint dir after PTQ")
+    ap.add_argument("--load-quantized", default="",
+                    help="serve pre-quantized params from this checkpoint "
+                         "dir (skips PTQ; spec comes from the checkpoint)")
+    ap.add_argument("--manifest-json", default="",
+                    help="write the quantization manifest to this path")
+    # --- engine --------------------------------------------------------
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--engine", default="auto",
@@ -51,25 +127,97 @@ def main():
 
     import jax
     import numpy as np
+    from repro import quant as quant_api
     from repro.configs import get_config, get_reduced
     from repro.models import Model
-    from repro.quantize import quantize_model
     from repro.serve import PagedServeEngine, Request, ServeEngine
     from repro.serve.engine import supports_paging
 
+    if args.backend is not None:
+        try:    # fail fast on both paths: before PTQ and before ckpt load
+            quant_api.fallback_chain(args.backend)
+        except KeyError as e:
+            raise SystemExit(f"--backend: {e.args[0]}")
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, args.cache_len))
     model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    print(f"[launch.serve] {cfg.name}: {model.n_params():,} params")
 
-    if args.bits:
-        t0 = time.time()
-        params = quantize_model(params, model.axes(), bits=args.bits,
-                                method=args.method, group_size=64, iters=3)
-        print(f"[launch.serve] {args.method}-{args.bits}bit in "
-              f"{time.time()-t0:.1f}s")
-        model = Model(cfg.replace(gemm_backend=args.backend))
+    manifest = None
+    if args.load_quantized:
+        # weight-shape flags describe the *stored* weights and cannot be
+        # changed after the fact; --backend is a runtime execution
+        # preference, so it still applies to a loaded checkpoint
+        fixed = {"--bits": args.bits, "--method": args.format,
+                 "--group-size": args.group_size, "--iters": args.iters,
+                 "--spec": args.spec or None,
+                 "--save-quantized": args.save_quantized or None}
+        bad = [k for k, v in fixed.items() if v is not None]
+        if bad:
+            raise SystemExit(f"{', '.join(bad)} cannot be combined with "
+                             "--load-quantized: the checkpoint's weights "
+                             "are already quantized (re-quantize without "
+                             "--load-quantized instead)")
+        params, spec, manifest, extra = quant_api.load_quantized(
+            args.load_quantized)
+        if extra.get("arch") and extra["arch"] != cfg.name:
+            raise SystemExit(f"checkpoint arch {extra['arch']!r} does not "
+                             f"match --arch {cfg.name!r}")
+        # cfg.name is identical for reduced and full configs — compare
+        # dimensions too, or a reduced checkpoint dies in the first
+        # forward with an opaque shape error
+        dims = {"d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "vocab_size": cfg.vocab_size}
+        stored = {k: extra[k] for k in dims if k in extra}
+        bad = {k: (v, dims[k]) for k, v in stored.items() if v != dims[k]}
+        if bad:
+            raise SystemExit(
+                f"checkpoint model dims do not match --arch/--reduced: "
+                + ", ".join(f"{k}: ckpt {a} vs cfg {b}"
+                            for k, (a, b) in bad.items()))
+        if args.backend is not None:
+            spec = spec.replace(backend=args.backend)
+        print(f"[launch.serve] loaded quantized checkpoint "
+              f"{args.load_quantized} ({spec.describe()})")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        spec = build_spec(args)
+        if spec is None:
+            if args.save_quantized:
+                raise SystemExit("--save-quantized requires quantization "
+                                 "(remove --bits 0)")
+            print("[launch.serve] serving dense FP (no quantization)")
+        else:
+            t0 = time.time()
+            try:
+                params, manifest = quant_api.quantize_model(params, spec,
+                                                            model.axes())
+            except ValueError as e:   # spec errors surfaced at plan time
+                raise SystemExit(f"invalid quant spec: {e}")
+            print(f"[launch.serve] {spec.describe()} in "
+                  f"{time.time()-t0:.1f}s")
+            print(f"[launch.serve] {manifest.summary()}")
+            if args.save_quantized:
+                path = quant_api.save_quantized(
+                    args.save_quantized, params, spec, manifest,
+                    arch=cfg.name,
+                    extra_meta={"d_model": cfg.d_model,
+                                "n_layers": cfg.n_layers,
+                                "vocab_size": cfg.vocab_size})
+                print(f"[launch.serve] quantized checkpoint -> {path}")
+    if args.manifest_json:
+        if manifest is not None:
+            manifest.save(args.manifest_json)
+            print(f"[launch.serve] manifest -> {args.manifest_json}")
+        else:
+            print(f"[launch.serve] warning: --manifest-json ignored "
+                  f"(no manifest: dense serve, or checkpoint saved "
+                  f"without one)")
+
+    if spec is not None:
+        cfg = cfg.replace(quant=spec)
+        model = Model(cfg)
+    print(f"[launch.serve] {cfg.name}: {model.n_params():,} params, "
+          f"backend preference {cfg.backend_preference}")
 
     on_token = None
     if args.stream:

@@ -384,7 +384,7 @@ def _split_heads(x, n, d):
 
 
 def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
-              causal=True, backend="dense"):
+              causal=True, backend=None):
     """GQA/MHA/SWA attention.
 
     x: [B, S, d]; positions: [B, S].
@@ -510,7 +510,7 @@ def decode_attend(q, cache, positions, *, window=0, scale=None):
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
-def cross_kv(params, cfg, enc_out, backend="dense"):
+def cross_kv(params, cfg, enc_out, backend=None):
     """Project encoder output to cross-attention K/V (cached at prefill)."""
     hd = cfg.head_dim_
     hkv = cfg.n_kv_heads
@@ -521,7 +521,7 @@ def cross_kv(params, cfg, enc_out, backend="dense"):
     return k, v
 
 
-def cross_attend(params, cfg, x, k, v, backend="dense"):
+def cross_attend(params, cfg, x, k, v, backend=None):
     """Decoder cross-attention against (possibly cached) encoder K/V."""
     b, s, _ = x.shape
     hd = cfg.head_dim_
@@ -547,7 +547,7 @@ def _rms(x, scale, eps=1e-6):
 
 
 def mla_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
-              backend="dense"):
+              backend=None):
     """Multi-head latent attention with compressed KV cache.
 
     Prefill/train: decompress latent KV inside the blockwise scan.

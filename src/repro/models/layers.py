@@ -85,7 +85,7 @@ def mlp_desc(cfg, d_ff=None):
     }
 
 
-def mlp_apply(params, x, backend="dense"):
+def mlp_apply(params, x, backend=None):
     if "gate" in params:
         g = linear_apply(params["gate"], x, backend=backend)
         u = linear_apply(params["up"], x, backend=backend)
@@ -120,7 +120,7 @@ def embed_apply(params, tokens, positions=None):
     return x
 
 
-def unembed_apply(params, x, backend="dense"):
+def unembed_apply(params, x, backend=None):
     from repro.parallel.sharding import shard_act
     w = params.get("unembed", params["tok"])           # tied if absent
     logits = linear_apply(w, x, backend=backend, out_dtype=jnp.float32)

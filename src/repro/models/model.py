@@ -188,7 +188,7 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
         x, _ = tfm.stack_apply(params["encoder"]["stack"], enc_cfg, x,
                                positions, causal=False,
-                               backend=cfg.gemm_backend)
+                               backend=cfg.backend_preference)
         return norm_apply(params["encoder"]["final_norm"], x)
 
     def _logits_padded(self, params, batch: dict):
@@ -199,9 +199,9 @@ class Model:
             enc_out = self.encode(params, batch["frames"])
         x, positions = self._embed(params, batch)
         x, _ = tfm.stack_apply(params["stack"], cfg, x, positions,
-                               enc_out=enc_out, backend=cfg.gemm_backend)
+                               enc_out=enc_out, backend=cfg.backend_preference)
         x = norm_apply(params["final_norm"], x)
-        return unembed_apply(params["embed"], x, backend=cfg.gemm_backend)
+        return unembed_apply(params["embed"], x, backend=cfg.backend_preference)
 
     def forward(self, params, batch: dict):
         """Full-sequence logits (training / eval). Returns [B, S, V]."""
@@ -252,10 +252,10 @@ class Model:
         x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
                                    caches=cache,
                                    cache_at=positions[:, 0],
-                                   enc_out=enc_out, backend=cfg.gemm_backend)
+                                   enc_out=enc_out, backend=cfg.backend_preference)
         x = norm_apply(params["final_norm"], x[:, -1:])
         logits = unembed_apply(params["embed"], x,
-                               backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
+                               backend=cfg.backend_preference)[:, 0, : cfg.vocab_size]
         return logits, cache
 
     def prefill_chunk(self, params, batch: dict, cache, start_pos, last_idx):
@@ -270,7 +270,7 @@ class Model:
         x, positions = self._embed(params, batch, start_pos)
         x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
                                    caches=cache, cache_at=positions[:, 0],
-                                   backend=cfg.gemm_backend)
+                                   backend=cfg.backend_preference)
         b = x.shape[0]
         idx = jnp.asarray(last_idx, jnp.int32)
         if idx.ndim == 0:
@@ -278,7 +278,7 @@ class Model:
         x = x[jnp.arange(b), idx][:, None]               # [B, 1, d]
         x = norm_apply(params["final_norm"], x)
         logits = unembed_apply(params["embed"], x,
-                               backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
+                               backend=cfg.backend_preference)[:, 0, : cfg.vocab_size]
         return logits, cache
 
     def decode_step(self, params, tokens, cache, pos):
@@ -295,8 +295,8 @@ class Model:
                         if cfg.pos == "learned" else None)
         x, cache = tfm.stack_apply(params["stack"], cfg, x, positions,
                                    caches=cache, cache_at=pos_arr,
-                                   backend=cfg.gemm_backend)
+                                   backend=cfg.backend_preference)
         x = norm_apply(params["final_norm"], x)
         logits = unembed_apply(params["embed"], x,
-                               backend=cfg.gemm_backend)[:, 0, : cfg.vocab_size]
+                               backend=cfg.backend_preference)[:, 0, : cfg.vocab_size]
         return logits, cache

@@ -67,7 +67,7 @@ def _expert_bank(w, shape3d):
     return w
 
 
-def moe_apply(params, cfg, x, backend="dense"):
+def moe_apply(params, cfg, x, backend=None):
     """x: [B, S, d] -> [B, S, d].  Static shapes throughout (pjit-safe).
 
     Dispatch is GROUPED per batch row (GShard groups): each row gets its

@@ -139,7 +139,7 @@ def ssd_chunked(xh, dt, A, B, C, chunk: int, h0=None):
     return y[:, :l], h_last
 
 
-def ssm_apply(params, cfg, x, *, cache=None, backend="dense"):
+def ssm_apply(params, cfg, x, *, cache=None, backend=None):
     """Mamba2 block. x: [B, S, d].
 
     cache=None: train/prefill-from-scratch (returns y only).

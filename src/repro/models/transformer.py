@@ -51,7 +51,7 @@ def block_desc(cfg, kind: str, mlp_kind: str, cross: bool = False,
 
 def block_apply(params, cfg, kind: str, mlp_kind: str, x, positions, *,
                 cache=None, cache_at=None, causal=True, enc_out=None,
-                backend="dense"):
+                backend=None):
     """Returns (x, new_cache); cache is None on the train path."""
     h = norm_apply(params["ln1"], x)
     if kind == "attn":
@@ -193,7 +193,7 @@ def _run_block(bparams, cfg, kind, mlpk, x, positions, cache, cache_at,
 
 
 def stack_apply(params, cfg, x, positions, *, caches=None, cache_at=None,
-                causal=True, enc_out=None, backend="dense"):
+                causal=True, enc_out=None, backend=None):
     """Run the decoder stack; returns (x, new_caches-or-None)."""
     plan = layer_plan(cfg)
 

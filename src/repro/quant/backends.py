@@ -1,0 +1,203 @@
+"""Execution-backend registry: capability negotiation + fallback chain.
+
+``linear_apply`` used to pick its execution path with an ``isinstance``
+check plus a raw string; now every linear resolves here:
+
+    name = resolve_backend(preference, w)     # capability negotiation
+    y    = execute_linear(x, w, backend=preference)
+
+Each registered backend declares
+
+  * ``available()`` — can it run *at all* on this host (Pallas kernels run
+    anywhere via interpret mode, so this is almost always True);
+  * ``native()``    — is it the hardware-native path here (Pallas on TPU);
+    ``auto`` resolution only considers native backends, so a CPU host
+    auto-selects ``bcq_xla`` instead of interpret-mode Pallas, while an
+    *explicit* preference still runs interpreted (tests, kernel bring-up);
+  * ``supports(w)`` — per-weight capability: plane count, group-size
+    granularity, problem geometry (consults
+    :func:`repro.tune.dispatch.kernel_supports` for the Pallas kernels).
+
+Resolution walks the preference's fallback chain —
+``mxu_pallas``/``lut_pallas`` -> ``bcq_xla`` -> ``dense`` — and returns the
+first backend that is usable and supports the weight, so a new format or
+an odd group size degrades gracefully instead of crashing a serve tick.
+
+Dense (unquantized) array leaves resolve to the plain einsum path, making
+this the single dispatch point for *every* linear in the model stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQWeight
+from repro.core import lut_gemm as _lg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendInfo:
+    name: str
+    execute: Callable[..., jax.Array]          # (x, w, out_dtype) -> y
+    supports: Callable[[BCQWeight], bool]
+    available: Callable[[], bool]
+    native: Callable[[], bool]
+    kernel: Optional[str] = None               # repro.tune kernel id
+    description: str = ""
+
+
+_REGISTRY: Dict[str, BackendInfo] = {}
+
+#: resolution order for ``backend="auto"`` (best native first)
+AUTO_CHAIN: Tuple[str, ...] = ("mxu_pallas", "lut_pallas", "bcq_xla", "dense")
+
+#: explicit-preference fallback chains (first entry = the preference)
+FALLBACK_CHAINS: Dict[str, Tuple[str, ...]] = {
+    "mxu_pallas": ("mxu_pallas", "bcq_xla", "dense"),
+    "lut_pallas": ("lut_pallas", "bcq_xla", "dense"),
+    "bcq_xla": ("bcq_xla", "dense"),
+    "bcq_xla_planes": ("bcq_xla_planes", "bcq_xla", "dense"),
+    "dense": ("dense",),
+    "auto": AUTO_CHAIN,
+}
+
+
+def register_backend(info: BackendInfo,
+                     chain: Optional[Tuple[str, ...]] = None) -> BackendInfo:
+    _REGISTRY[info.name] = info
+    if chain is not None:
+        FALLBACK_CHAINS[info.name] = chain
+    elif info.name not in FALLBACK_CHAINS:
+        FALLBACK_CHAINS[info.name] = (info.name, "bcq_xla", "dense")
+    return info
+
+
+def get_backend(name: str) -> BackendInfo:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(n for n in _REGISTRY if _REGISTRY[n].available())
+
+
+def fallback_chain(preference: Optional[str]) -> Tuple[str, ...]:
+    pref = preference or "auto"
+    if pref not in FALLBACK_CHAINS:
+        raise KeyError(f"unknown backend preference {pref!r}; known: "
+                       f"{sorted(FALLBACK_CHAINS)}")
+    return FALLBACK_CHAINS[pref]
+
+
+# ---------------------------------------------------------------------------
+# resolution + execution
+# ---------------------------------------------------------------------------
+
+
+def resolve_backend(preference: Optional[str], w: BCQWeight) -> str:
+    """Pick the backend that will execute this weight.
+
+    The head of an *explicit* chain only needs ``available()`` (interpret
+    mode is a legitimate explicit request); fallback entries and ``auto``
+    require ``native()`` so we never silently degrade onto an emulated
+    kernel.  ``dense`` always supports everything, so resolution total.
+    """
+    pref = preference or "auto"
+    chain = fallback_chain(pref)
+    for i, name in enumerate(chain):
+        info = get_backend(name)
+        explicit = i == 0 and pref != "auto"
+        usable = info.available() if explicit else info.native()
+        if usable and info.supports(w):
+            return name
+    return "dense"
+
+
+def execute_linear(x: jax.Array, w, *, backend: Optional[str] = None,
+                   out_dtype=None) -> jax.Array:
+    """y = x @ W^T for a dense array or BCQWeight leaf.
+
+    This is the single execution-dispatch point of the model stack:
+    ``backend`` is a *preference*, and capability negotiation picks the
+    first link of its fallback chain that can run this weight.
+    """
+    out_dtype = out_dtype or x.dtype
+    if not isinstance(w, BCQWeight):
+        return jnp.einsum("...n,mn->...m", x, w.astype(x.dtype),
+                          preferred_element_type=jnp.float32).astype(out_dtype)
+    name = resolve_backend(backend, w)
+    return get_backend(name).execute(x, w, out_dtype)
+
+
+def kernel_for(preference: Optional[str]) -> Optional[str]:
+    """The repro.tune kernel id the preference would launch (for pretune):
+    None when resolution lands on an XLA/dense path."""
+    pref = preference or "auto"
+    for i, name in enumerate(fallback_chain(pref)):
+        info = get_backend(name)
+        explicit = i == 0 and pref != "auto"
+        if info.available() if explicit else info.native():
+            return info.kernel
+    return None
+
+
+# ---------------------------------------------------------------------------
+# built-in backends (executors live in repro.core.lut_gemm / repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def _supports_any(w: BCQWeight) -> bool:
+    return True
+
+
+def _supports_pallas(kernel: str):
+    def check(w: BCQWeight) -> bool:
+        from repro.tune.dispatch import kernel_supports
+        if w.packed.ndim != 3:          # stacked leaves only run inside scan
+            return False
+        return kernel_supports(kernel, m=w.out_features, n=w.in_features,
+                               group_size=w.group_size, bits=w.bits)
+    return check
+
+
+def _exec(backend_name: str):
+    def run(x, w, out_dtype):
+        return _lg.bcq_apply(x, w, backend=backend_name, out_dtype=out_dtype)
+    return run
+
+
+register_backend(BackendInfo(
+    name="dense", execute=_exec("dense"), supports=_supports_any,
+    available=lambda: True, native=lambda: True,
+    description="dequantize to f32 and matmul (FPE baseline, Table IV)"))
+
+register_backend(BackendInfo(
+    name="bcq_xla", execute=_exec("bcq_xla"), supports=_supports_any,
+    available=lambda: True, native=lambda: True,
+    description="pure-XLA packed execution (pjit-traceable everywhere)"))
+
+register_backend(BackendInfo(
+    name="bcq_xla_planes", execute=_exec("bcq_xla_planes"),
+    supports=_supports_any, available=lambda: True, native=lambda: False,
+    description="per-plane grouped-contraction XLA variant"))
+
+register_backend(BackendInfo(
+    name="lut_pallas", execute=_exec("lut_pallas"),
+    supports=_supports_pallas("lut_gemm"),
+    available=lambda: True, native=_on_tpu, kernel="lut_gemm",
+    description="paper-faithful FIGLUT Pallas kernel (interpret off-TPU)"))
+
+register_backend(BackendInfo(
+    name="mxu_pallas", execute=_exec("mxu_pallas"),
+    supports=_supports_pallas("bcq_matmul"),
+    available=lambda: True, native=_on_tpu, kernel="bcq_matmul",
+    description="dequant-in-VMEM MXU Pallas kernel (interpret off-TPU)"))

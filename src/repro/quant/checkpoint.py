@@ -1,0 +1,91 @@
+"""Quantized-checkpoint save/load on top of ``train.checkpoint``.
+
+Serving used to re-run PTQ at every launch (~minutes of solver time for
+a real model).  ``save_quantized`` persists the *already quantized* tree
+— BCQWeight leaves are encoded as plain dict bundles the numpy-backed
+checkpointer understands, with the static fields stored as 0-d arrays —
+plus the :class:`QuantSpec` and manifest in the checkpoint ``extra``
+blob.  ``load_quantized`` rebuilds the exact same pytree, so a serve
+from a loaded checkpoint is token-for-token identical to
+quantize-at-launch (tested in tests/test_quant_api.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bcq import BCQWeight
+from repro.quant.api import QuantManifest
+from repro.quant.spec import QuantSpec
+from repro.train import checkpoint as ckpt
+
+_BCQ_TAG = "__bcq_weight__"
+
+
+def _encode(tree):
+    if isinstance(tree, BCQWeight):
+        return {_BCQ_TAG: {
+            "packed": tree.packed, "alpha": tree.alpha, "z": tree.z,
+            "group_size": np.int64(tree.group_size),
+            "in_features": np.int64(tree.in_features),
+            "out_features": np.int64(tree.out_features),
+        }}
+    if isinstance(tree, dict):
+        return {k: _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_encode(v) for v in tree]
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    return tree
+
+
+def _decode(tree):
+    if isinstance(tree, dict):
+        if _BCQ_TAG in tree:
+            d = tree[_BCQ_TAG]
+            return BCQWeight(
+                packed=jnp.asarray(d["packed"], jnp.uint8),
+                alpha=jnp.asarray(d["alpha"], jnp.float32),
+                z=jnp.asarray(d["z"], jnp.float32),
+                group_size=int(d["group_size"]),
+                in_features=int(d["in_features"]),
+                out_features=int(d["out_features"]))
+        return {k: _decode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_decode(v) for v in tree]
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    if tree is None:
+        return None
+    return jnp.asarray(tree)
+
+
+def save_quantized(ckpt_dir: str, params, spec: QuantSpec,
+                   manifest: Optional[QuantManifest] = None,
+                   step: int = 0, arch: str = "",
+                   extra_meta: Optional[dict] = None) -> str:
+    """Atomically persist a quantized params tree + its spec/manifest.
+
+    ``extra_meta`` (JSON-serializable) rides along in the checkpoint
+    extra blob — the launcher records model dimensions there so a
+    reduced-config checkpoint can't be loaded into a full-size model.
+    """
+    extra = {"quant_spec": spec.to_dict(), "arch": arch,
+             **(extra_meta or {})}
+    if manifest is not None:
+        extra["manifest"] = manifest.to_dict()
+    return ckpt.save(ckpt_dir, step, _encode(params), extra=extra)
+
+
+def load_quantized(ckpt_dir: str, step: Optional[int] = None,
+                   ) -> Tuple[Any, QuantSpec, Optional[QuantManifest], dict]:
+    """Restore ``(params, spec, manifest, extra)`` from a quantized ckpt."""
+    tree, _, extra = ckpt.restore(ckpt_dir, step)
+    params = _decode(tree)
+    if "quant_spec" not in extra:
+        raise ValueError(f"{ckpt_dir} is not a quantized checkpoint "
+                         "(no quant_spec in manifest extra)")
+    spec = QuantSpec.from_dict(extra["quant_spec"])
+    manifest = (QuantManifest.from_dict(extra["manifest"])
+                if extra.get("manifest") else None)
+    return params, spec, manifest, extra

@@ -1,0 +1,150 @@
+"""Weight-format registry: every format lowers into BCQ bit-planes.
+
+FIGLUT's engine executes *one* representation — packed ±1 planes with
+per-(row, group) scales (``core.bcq.BCQWeight``) — and the paper's claim
+that a fixed design "efficiently supports different bit precisions and
+quantization methods" is realized in software by mapping every supported
+format into that representation at quantize time:
+
+  * ``bcq``     — alternating non-uniform BCQ (ShiftAddLLM-class solver);
+  * ``rtn``     — round-to-nearest *uniform* quantization mapped exactly
+                  into BCQ(+offset) planes (Eq. (3); runs OPTQ/AWQ/RTN
+                  checkpoints on the same engine);
+  * ``ternary`` — {-a, 0, +a} weights (TWN-style threshold) encoded into
+                  two planes with alpha_1 = alpha_2 = a/2, so
+                  (a/2)(b_1 + b_2) ∈ {-a, 0, +a} reconstructs exactly.
+
+New formats register with :func:`register_format` and immediately work
+through ``quantize_model``/``linear_apply`` without touching model code —
+the kernels only ever see planes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq as bcq_mod
+from repro.core.bcq import BCQWeight, pack_planes
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatInfo:
+    """One registered weight format.
+
+    ``quantize(w2d, bits, group_size, iters) -> BCQWeight`` must be pure
+    JAX (it runs under ``lax.map`` for scan-stacked leaves).
+    ``fixed_plane_bits`` pins the stored plane count regardless of the
+    requested bits (ternary is always 2 planes); ``None`` means the
+    request decides.  ``effective_bits`` is the information-theoretic
+    width reported in manifests (ternary stores 2 planes but carries
+    log2(3) ≈ 1.58 bits).
+    """
+
+    name: str
+    quantize: Callable[..., BCQWeight]
+    fixed_plane_bits: Optional[int] = None
+    effective_bits: Optional[float] = None
+    description: str = ""
+
+    def plane_bits(self, requested_bits: float) -> int:
+        if self.fixed_plane_bits is not None:
+            return self.fixed_plane_bits
+        return int(requested_bits)
+
+
+_REGISTRY: Dict[str, FormatInfo] = {}
+
+
+def register_format(info: FormatInfo) -> FormatInfo:
+    _REGISTRY[info.name] = info
+    return info
+
+
+def get_format(name: str) -> FormatInfo:
+    from repro.quant.spec import canonical_format
+    key = canonical_format(name)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown quant format {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def available_formats() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in formats
+# ---------------------------------------------------------------------------
+
+
+def _quantize_bcq(w2d, *, bits: int, group_size: int, iters: int) -> BCQWeight:
+    return bcq_mod.quantize(w2d, bits=bits, group_size=group_size, iters=iters)
+
+
+def _quantize_rtn(w2d, *, bits: int, group_size: int, iters: int = 0) -> BCQWeight:
+    del iters
+    return bcq_mod.from_uniform(w2d, bits=bits, group_size=group_size)
+
+
+def quantize_ternary(w_dense: jax.Array, *, bits: int = 2,
+                     group_size: int = 128, iters: int = 0,
+                     threshold: float = 0.7) -> BCQWeight:
+    """TWN-style ternarization encoded as 2-plane BCQ.
+
+    Per (row, group): delta = threshold * mean|w|; weights above delta keep
+    their sign and share the magnitude a = mean(|w| over the kept set);
+    the rest snap to 0.  The plane encoding
+
+        t = +1 -> (b1, b2) = (+1, +1)
+        t =  0 -> (b1, b2) = (+1, -1)
+        t = -1 -> (b1, b2) = (-1, -1)
+
+    with alpha_1 = alpha_2 = a/2 and z = 0 reconstructs (a/2)(b1 + b2)
+    = a*t exactly, so the fixed bit-serial engine executes ternary
+    checkpoints with zero representational error beyond ternarization
+    itself.  ``bits``/``iters`` are accepted for registry-signature
+    uniformity and ignored (ternary is always 2 planes).
+    """
+    del bits, iters
+    w = jnp.asarray(w_dense, jnp.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got {w.shape}")
+    out, n = w.shape
+    g = int(group_size)
+    n_pad = -(-n // g) * g
+    if n_pad != n:
+        w = jnp.pad(w, ((0, 0), (0, n_pad - n)), mode="edge")
+    n_groups = n_pad // g
+    wg = w.reshape(out, n_groups, g)
+
+    absw = jnp.abs(wg)
+    delta = threshold * absw.mean(axis=-1, keepdims=True)       # [out, G, 1]
+    mask = absw > delta
+    cnt = jnp.maximum(mask.sum(axis=-1), 1)                     # [out, G]
+    a = (absw * mask).sum(axis=-1) / cnt                        # magnitude
+    t = jnp.sign(wg) * mask                                     # {-1, 0, +1}
+
+    p1 = jnp.where(t < 0, -1.0, 1.0)
+    p2 = jnp.where(t > 0, 1.0, -1.0)
+    planes = jnp.stack([p1, p2]).reshape(2, out, n_pad)
+    alpha = jnp.broadcast_to((a / 2.0)[None], (2, out, n_groups))
+    z = jnp.zeros((out, n_groups), jnp.float32)
+    return BCQWeight(packed=pack_planes(planes),
+                     alpha=alpha.astype(jnp.float32), z=z,
+                     group_size=g, in_features=n, out_features=out)
+
+
+register_format(FormatInfo(
+    name="bcq", quantize=_quantize_bcq,
+    description="alternating non-uniform BCQ (greedy init + LS refinement)"))
+register_format(FormatInfo(
+    name="rtn", quantize=_quantize_rtn,
+    description="uniform round-to-nearest, exact BCQ(+offset) mapping"))
+register_format(FormatInfo(
+    name="ternary", quantize=quantize_ternary, fixed_plane_bits=2,
+    effective_bits=1.585,
+    description="TWN-style {-a,0,+a} encoded as 2 BCQ planes (alpha/2 each)"))

@@ -1,0 +1,180 @@
+"""QuantSpec — the single declarative description of a quantization run.
+
+One frozen, hashable dataclass replaces the ``bits/method/group_size/
+iters/backend`` kwargs that used to be hand-threaded through
+``configs/base.py``, ``quantize/ptq.py`` and ``launch/serve.py``:
+
+    spec = QuantSpec(format="bcq", bits=2.4, group_size=64, backend="auto")
+    qparams, manifest = repro.quant.quantize_model(params, spec, model.axes())
+
+Fields:
+  * ``format``      — key into the format registry (:mod:`repro.quant.formats`):
+                      ``bcq`` (alternating non-uniform), ``rtn`` (uniform
+                      round-to-nearest mapped exactly into BCQ planes; alias
+                      ``uniform``), ``ternary`` ({-a, 0, +a} mapped into two
+                      BCQ planes).
+  * ``bits``        — integer, or a *fractional average* (e.g. ``2.4``) which
+                      triggers sensitivity-driven mixed precision via
+                      :func:`repro.core.mixed_precision.allocate_bits`
+                      (paper Fig. 17 / the 2.4-bit iso-perplexity point).
+  * ``group_size``  — input-dim scaling-factor group (LUT-GEMM convention).
+  * ``iters``       — alternating-refinement rounds for the ``bcq`` solver.
+  * ``backend``     — execution *preference* into the backend registry
+                      (:mod:`repro.quant.backends`): ``auto`` lets capability
+                      negotiation pick; an explicit name is honoured when the
+                      backend supports the weight, otherwise the fallback
+                      chain (pallas -> bcq_xla -> dense) engages.
+  * ``candidates``  — mixed-precision candidate bit-widths; ``()`` derives
+                      ``(floor(bits), ceil(bits), ceil(bits)+1)``.
+  * ``overrides``   — per-layer ``{'stack/scan/0/mixer/q': bits}`` pins
+                      (stored as a sorted tuple of pairs so the spec stays
+                      hashable and usable inside the frozen ModelConfig).
+
+The JSON round-trip (``to_json``/``from_json``, ``save``/``load``) is what
+the launcher's ``--spec`` flag and the quantized-checkpoint manifest use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+# alias map kept here (not in the registry) so the spec module stays
+# dependency-free; formats.py validates registry membership at quantize time
+_FORMAT_ALIASES = {"uniform": "rtn", "int": "rtn", "nonuniform": "bcq"}
+
+
+def canonical_format(name: str) -> str:
+    name = (name or "bcq").strip().lower()
+    return _FORMAT_ALIASES.get(name, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    format: str = "bcq"
+    bits: Optional[float] = None      # None -> format default (4; ternary 2)
+    group_size: int = 128
+    iters: int = 5
+    backend: str = "auto"
+    candidates: Tuple[int, ...] = ()
+    overrides: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "format", canonical_format(self.format))
+        if self.bits is None:
+            object.__setattr__(self, "bits",
+                               2.0 if self.format == "ternary" else 4.0)
+        elif self.format == "ternary" and float(self.bits) != 2:
+            # never silently serve 2-plane ternary as "N-bit" results
+            raise ValueError(
+                f"format 'ternary' always stores 2 planes; bits="
+                f"{self.bits:g} conflicts (omit bits or pass 2)")
+        object.__setattr__(self, "bits", float(self.bits))
+        if isinstance(self.overrides, Mapping):
+            object.__setattr__(
+                self, "overrides",
+                tuple(sorted((str(k), int(v)) for k, v in self.overrides.items())))
+        else:
+            object.__setattr__(
+                self, "overrides",
+                tuple(sorted((str(k), int(v)) for k, v in self.overrides)))
+        object.__setattr__(self, "candidates",
+                           tuple(int(c) for c in self.candidates))
+        if self.bits < 0:
+            raise ValueError(f"bits must be >= 0, got {self.bits}")
+        if self.group_size <= 0:
+            raise ValueError(f"group_size must be positive, got {self.group_size}")
+
+    # ------------------------------------------------------------------
+    # derived views
+    # ------------------------------------------------------------------
+    @property
+    def is_fractional(self) -> bool:
+        """True when ``bits`` is a fractional average -> mixed precision."""
+        return self.bits != int(self.bits)
+
+    @property
+    def is_mixed(self) -> bool:
+        return self.is_fractional or bool(self.overrides)
+
+    @property
+    def int_bits(self) -> int:
+        """Uniform bit-width (only meaningful when not fractional)."""
+        return int(self.bits)
+
+    @property
+    def candidate_bits(self) -> Tuple[int, ...]:
+        """Mixed-precision candidate set (explicit or derived from bits)."""
+        if self.candidates:
+            return tuple(sorted(set(self.candidates)))
+        lo = max(1, math.floor(self.bits))
+        hi = math.ceil(self.bits)
+        return tuple(sorted({lo, hi, hi + 1}))
+
+    @property
+    def overrides_map(self) -> dict:
+        return dict(self.overrides)
+
+    # ------------------------------------------------------------------
+    # construction / migration
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_legacy(cls, *, bits: Union[int, float] = 4, method: str = "bcq",
+                    group_size: int = 128, iters: int = 5,
+                    backend: str = "auto",
+                    bit_map: Optional[Mapping[str, int]] = None) -> "QuantSpec":
+        """Shim for the pre-registry kwargs (one-release deprecation path)."""
+        return cls(format=method, bits=bits, group_size=group_size,
+                   iters=iters, backend=backend or "auto",
+                   overrides=dict(bit_map) if bit_map else ())
+
+    # ------------------------------------------------------------------
+    # JSON round-trip
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["candidates"] = list(self.candidates)
+        d["overrides"] = {k: v for k, v in self.overrides}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "QuantSpec":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        # legacy spelling: {"method": ..} instead of {"format": ..}
+        if "format" not in kw and "method" in d:
+            kw["format"] = d["method"]
+        unknown = sorted(set(d) - fields - {"method"})
+        if unknown:
+            # a typo'd key ("groupsize") silently falling back to the
+            # default would quantize at a different quality/memory point
+            raise ValueError(f"unknown QuantSpec fields {unknown}; "
+                             f"valid: {sorted(fields)}")
+        return cls(**kw)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "QuantSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "QuantSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def describe(self) -> str:
+        b = f"{self.bits:g}"
+        tag = f"{self.format}-{b}bit"
+        if self.is_mixed:
+            tag += f" (mixed, candidates={list(self.candidate_bits)})"
+        return f"{tag} g{self.group_size} backend={self.backend}"

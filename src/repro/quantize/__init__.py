@@ -3,3 +3,7 @@ from repro.quantize.ptq import (quantize_model, abstract_quantized_params,
 
 __all__ = ["quantize_model", "abstract_quantized_params", "collect_linears",
            "QUANT_KEYS"]
+
+# NOTE: ``repro.quantize.quantize_model`` is the legacy kwargs surface
+# (deprecated, kept one release).  New code should use the declarative
+# API: ``from repro.quant import QuantSpec, quantize_model``.

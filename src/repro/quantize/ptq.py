@@ -85,10 +85,19 @@ def _is_quant_leaf(path, leaf, axes=None) -> bool:
     return True
 
 
-def collect_linears(params) -> dict:
-    """{'/'.join(path): array} for every quantizable weight."""
-    return {"/".join(map(str, p)): l for p, l in _walk(params)
-            if _is_quant_leaf(p, l)}
+def collect_linears(params, axes_tree=None) -> dict:
+    """{'/'.join(path): array} for every quantizable weight.
+
+    Pass ``axes_tree`` (``Model.axes()``) to apply the same logical-axes
+    name-collision guard the quantizer uses (qwen's scan-stacked q_b
+    bias), so bit plans and quantization agree on the layer set.
+    """
+    out = {}
+    for p, l in _walk(params):
+        axes = _axes_of(axes_tree, p) if axes_tree is not None else None
+        if _is_quant_leaf(p, l, axes):
+            out["/".join(map(str, p))] = l
+    return out
 
 
 def _axes_of(axes_tree, path):
@@ -120,25 +129,26 @@ def _lead_batch(axes, ndim):
 
 def _quantize_leaf(w, axes, bits, method, group_size, iters):
     """Quantize one weight leaf, handling stacked leading batch dims."""
+    # format registry lookup (lazy import: repro.quant.api imports this
+    # module); every registered format lowers into BCQWeight planes
+    from repro.quant.formats import get_format
+    fmt = get_format(method)
     nb = _lead_batch(axes, w.ndim)
 
     def quant2d(w2):
-        if method == "bcq":
-            return bcq_mod.quantize(w2, bits=bits, group_size=group_size,
-                                    iters=iters)
-        return bcq_mod.from_uniform(w2, bits=bits, group_size=group_size)
+        return fmt.quantize(w2, bits=fmt.plane_bits(bits),
+                            group_size=group_size, iters=iters)
 
     if nb:
         lead = w.shape[:nb]
         rows = int(np.prod(w.shape[nb:-1]))
         cols = w.shape[-1]
         w3 = w.reshape(int(np.prod(lead)), rows, cols).astype(jnp.float32)
-        q0 = quant2d(w3[0])                 # structure template
         stacked = jax.lax.map(lambda wi: quant2d(wi), w3)
         unflat = lambda a: a.reshape(*lead, *a.shape[1:])
         return BCQWeight(packed=unflat(stacked.packed),
                          alpha=unflat(stacked.alpha), z=unflat(stacked.z),
-                         group_size=q0.group_size,
+                         group_size=int(group_size),
                          in_features=cols, out_features=rows)
     rows = int(np.prod(w.shape[:-1]))
     return quant2d(w.reshape(rows, w.shape[-1]).astype(jnp.float32))
@@ -146,13 +156,28 @@ def _quantize_leaf(w, axes, bits, method, group_size, iters):
 
 def quantize_model(params, axes_tree=None, *, bits=4, method: str = "bcq",
                    group_size: int = 128, iters: int = 5,
-                   bit_map: Optional[Mapping[str, int]] = None):
+                   bit_map: Optional[Mapping[str, int]] = None,
+                   _from_spec: bool = False):
     """Replace every quantizable linear with BCQWeight.
 
     bit_map: optional {'path/like/this': bits} per-layer override (mixed
     precision).  axes_tree: logical-axes tree (Model.axes()) used to detect
     scan-stacked weights; optional for unrolled models.
+
+    .. deprecated:: Loose ``bits/method/group_size/iters`` kwargs are the
+       legacy surface, kept for one release.  Prefer the declarative
+       entry point, which also plans mixed precision and returns a
+       manifest::
+
+           from repro.quant import QuantSpec, quantize_model
+           qparams, manifest = quantize_model(params, QuantSpec(...), axes)
     """
+    if not _from_spec:
+        import warnings
+        warnings.warn(
+            "repro.quantize.quantize_model(bits=, method=, ...) is "
+            "deprecated; use repro.quant.quantize_model(params, QuantSpec)",
+            DeprecationWarning, stacklevel=2)
     out = params
     for path, leaf in list(_walk(params)):
         axes = _axes_of(axes_tree, path) if axes_tree is not None else None

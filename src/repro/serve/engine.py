@@ -16,9 +16,11 @@ paged engine (greedy outputs must match token-for-token) and still
 serves models the paged cache doesn't cover (SSM/hybrid, enc-dec,
 sliding-window).
 
-Both work with dense or BCQ-quantized params transparently (the model's
-``gemm_backend`` decides the execution path) — the deployment shape of
-the paper's engine: weight-only-quantized LLM decode.
+Both work with dense or BCQ-quantized params transparently — the
+config's :class:`~repro.quant.QuantSpec` (or legacy ``gemm_backend``
+shim) sets the backend *preference* and the registry's capability
+negotiation picks the execution path per weight — the deployment shape
+of the paper's engine: weight-only-quantized LLM decode.
 """
 from __future__ import annotations
 
@@ -62,8 +64,8 @@ def _pretune(model: Model, params, batch_sizes, verbose: bool = True):
     No-op for dense params or non-Pallas backends."""
     from repro import tune as tune_mod
     from repro.core import lut_gemm as core_lg
-    kernel = {"lut_pallas": "lut_gemm",
-              "mxu_pallas": "bcq_matmul"}.get(model.cfg.gemm_backend)
+    from repro.quant.backends import kernel_for
+    kernel = kernel_for(model.cfg.backend_preference)
     if kernel is None or not tune_mod.collect_bcq_specs(params):
         return
     # interpret mode (CPU smoke): small reps + truncated space so

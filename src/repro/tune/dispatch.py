@@ -35,6 +35,27 @@ def tune_mode() -> str:
     return "on"
 
 
+def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
+                    bits: Optional[int] = None) -> bool:
+    """Capability probe used by the quant backend registry
+    (:mod:`repro.quant.backends`): can this Pallas kernel launch a
+    ``[m, n]``-weight problem at all?
+
+    The constraints mirror the op wrappers' padding math: plane packing
+    is byte-granular along the input dim (group_size % 8 == 0, which also
+    covers the LUT kernel's mu=4 sub-group split), and the bit-serial
+    loop streams at most 8 planes.
+    """
+    from .space import KERNELS
+    if kernel not in KERNELS:
+        return False
+    if m < 1 or n < 1 or group_size < 8 or group_size % 8:
+        return False
+    if bits is not None and not 1 <= bits <= 8:
+        return False
+    return True
+
+
 def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,
                   mu: int = 0, group_size: int = 128,
                   interpret: bool = False,

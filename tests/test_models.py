@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_reduced, SHAPES
 from repro.models import Model
-from repro.quantize import quantize_model
+from repro.quant import QuantSpec, quantize_model
 
 RNG = jax.random.PRNGKey(0)
 
@@ -170,9 +170,9 @@ def test_quantized_model_close_to_fp(arch):
     params = m.init(RNG)
     batch = _batch(cfg)
     loss_fp = float(m.loss_fn(params, batch))
-    qparams = quantize_model(params, m.axes(), bits=4, method="bcq",
-                             group_size=32, iters=2)
-    mq = Model(cfg.replace(gemm_backend="bcq_xla"))
+    spec = QuantSpec(bits=4, group_size=32, iters=2, backend="bcq_xla")
+    qparams, _ = quantize_model(params, spec, m.axes())
+    mq = Model(cfg.replace(quant=spec))
     loss_q = float(mq.loss_fn(qparams, batch))
     assert abs(loss_q - loss_fp) < 0.05, (loss_fp, loss_q)
 

@@ -1,0 +1,401 @@
+"""Unified repro.quant API: spec round-trip, format/backend registries
+with capability negotiation + fallback, mixed precision planning, and
+quantized-checkpoint save -> load -> serve equivalence."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.bcq import BCQWeight, dequantize, from_uniform
+from repro.models import Model
+from repro.quant import (QuantSpec, QuantManifest, available_backends,
+                         available_formats, execute_linear, fallback_chain,
+                         get_format, kernel_for, load_quantized, plan_bits,
+                         quantize_model, resolve_backend, save_quantized)
+from repro.quantize import collect_linears
+from repro.quantize import quantize_model as legacy_quantize_model
+from repro.serve import Request, ServeEngine
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _f32(params):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params)
+
+
+def _model(arch="opt_6_7b", **over):
+    cfg = get_reduced(arch).replace(remat=False, dtype="float32", **over)
+    m = Model(cfg)
+    return m, _f32(m.init(RNG))
+
+
+def _w(out=16, n=64, seed=0):
+    return jnp.array(np.random.default_rng(seed).normal(size=(out, n)),
+                     jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec
+# ---------------------------------------------------------------------------
+
+
+class TestSpec:
+    def test_json_roundtrip(self):
+        s = QuantSpec(format="bcq", bits=2.4, group_size=64, iters=3,
+                      backend="lut_pallas", candidates=(2, 3, 4),
+                      overrides={"stack/scan/0/mixer/q": 4})
+        s2 = QuantSpec.from_json(s.to_json())
+        assert s2 == s
+        d = json.loads(s.to_json())
+        assert d["overrides"] == {"stack/scan/0/mixer/q": 4}
+
+    def test_aliases_and_fractional(self):
+        s = QuantSpec(format="uniform", bits=2.4)
+        assert s.format == "rtn"
+        assert s.is_fractional and s.is_mixed
+        assert s.candidate_bits == (2, 3, 4)
+        assert not QuantSpec(bits=3).is_mixed
+
+    def test_ternary_bits_default_and_conflict(self):
+        assert QuantSpec(format="ternary").bits == 2
+        assert QuantSpec(format="ternary", bits=2).bits == 2
+        with pytest.raises(ValueError, match="2 planes"):
+            QuantSpec(format="ternary", bits=4)
+
+    def test_file_roundtrip(self, tmp_path):
+        p = str(tmp_path / "spec.json")
+        s = QuantSpec(bits=3, group_size=32)
+        s.save(p)
+        assert QuantSpec.load(p) == s
+
+    def test_legacy_kwargs_shim(self):
+        s = QuantSpec.from_legacy(bits=3, method="uniform", group_size=64,
+                                  iters=2, backend="bcq_xla",
+                                  bit_map={"a": 2})
+        assert (s.format, s.bits, s.group_size, s.iters, s.backend) == \
+            ("rtn", 3.0, 64, 2, "bcq_xla")
+        assert s.overrides_map == {"a": 2}
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            QuantSpec(bits=-1)
+        with pytest.raises(ValueError):
+            QuantSpec(group_size=0)
+
+
+# ---------------------------------------------------------------------------
+# format registry
+# ---------------------------------------------------------------------------
+
+
+class TestFormats:
+    def test_registry_contents(self):
+        assert {"bcq", "rtn", "ternary"} <= set(available_formats())
+        with pytest.raises(KeyError):
+            get_format("no_such_format")
+
+    def test_rtn_routes_to_from_uniform(self):
+        w = _w()
+        via_registry = get_format("rtn").quantize(w, bits=3, group_size=16,
+                                                  iters=0)
+        direct = from_uniform(w, bits=3, group_size=16)
+        assert np.array_equal(via_registry.packed, direct.packed)
+        assert np.allclose(via_registry.alpha, direct.alpha)
+
+    def test_ternary_correctness_vs_reference(self):
+        """Dequantized ternary must match the independent {-a,0,+a}
+        reference exactly (the BCQ plane encoding adds no error)."""
+        w = _w(out=8, n=32, seed=1)
+        g = 8
+        wq = get_format("ternary").quantize(w, bits=2, group_size=g)
+        assert wq.bits == 2                      # always two planes
+        got = np.asarray(dequantize(wq))
+
+        wg = np.asarray(w).reshape(8, 32 // g, g)
+        delta = 0.7 * np.abs(wg).mean(-1, keepdims=True)
+        mask = np.abs(wg) > delta
+        a = (np.abs(wg) * mask).sum(-1) / np.maximum(mask.sum(-1), 1)
+        ref = (np.sign(wg) * mask * a[..., None]).reshape(8, 32)
+        assert np.allclose(got, ref, atol=1e-6)
+
+    def test_ternary_three_levels_per_group(self):
+        w = _w(out=4, n=32, seed=2)
+        wq = get_format("ternary").quantize(w, bits=2, group_size=16)
+        d = np.asarray(dequantize(wq)).reshape(4, 2, 16)
+        for r in range(4):
+            for g in range(2):
+                assert len(np.unique(np.round(d[r, g], 5))) <= 3
+
+    def test_ternary_exact_on_ternary_input(self):
+        a = 0.5
+        t = np.random.default_rng(3).integers(-1, 2, size=(4, 16))
+        wq = get_format("ternary").quantize(jnp.array(a * t, jnp.float32),
+                                            bits=2, group_size=16)
+        assert np.allclose(np.asarray(dequantize(wq)), a * t, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend registry: capability negotiation + fallback chain
+# ---------------------------------------------------------------------------
+
+
+class TestBackends:
+    def _wq(self, **kw):
+        return get_format("bcq").quantize(_w(), bits=2, group_size=16,
+                                          iters=1, **kw)
+
+    def test_chains(self):
+        assert fallback_chain("mxu_pallas") == ("mxu_pallas", "bcq_xla",
+                                                "dense")
+        assert fallback_chain("lut_pallas")[-1] == "dense"
+        assert fallback_chain(None) == fallback_chain("auto")
+        with pytest.raises(KeyError):
+            fallback_chain("no_such_backend")
+
+    def test_auto_resolves_native_off_tpu(self):
+        # on CPU auto must not pick an interpret-mode Pallas kernel
+        assert resolve_backend("auto", self._wq()) == "bcq_xla"
+        assert kernel_for("auto") is None
+
+    def test_explicit_pallas_honoured(self):
+        # explicit preference runs (interpret mode is a legitimate ask)
+        assert resolve_backend("lut_pallas", self._wq()) == "lut_pallas"
+        assert kernel_for("lut_pallas") == "lut_gemm"
+        assert kernel_for("mxu_pallas") == "bcq_matmul"
+
+    def test_capability_fallback_on_stacked_weight(self):
+        wq = self._wq()
+        stacked = BCQWeight(packed=wq.packed[None], alpha=wq.alpha[None],
+                            z=wq.z[None], group_size=wq.group_size,
+                            in_features=wq.in_features,
+                            out_features=wq.out_features)
+        # Pallas wrappers take 2-D logical weights only -> negotiation
+        # walks the chain down to bcq_xla instead of crashing
+        assert resolve_backend("mxu_pallas", stacked) == "bcq_xla"
+        assert resolve_backend("lut_pallas", stacked) == "bcq_xla"
+
+    def test_kernel_supports_probe(self):
+        from repro.tune.dispatch import kernel_supports
+        assert kernel_supports("lut_gemm", m=16, n=64, group_size=16)
+        assert not kernel_supports("lut_gemm", m=16, n=64, group_size=12)
+        assert not kernel_supports("bcq_matmul", m=16, n=64, group_size=16,
+                                   bits=9)
+        assert not kernel_supports("no_such_kernel", m=1, n=1, group_size=8)
+
+    def test_dense_always_available(self):
+        assert "dense" in available_backends()
+        assert "bcq_xla" in available_backends()
+
+    def test_execute_linear_backends_agree(self):
+        wq = self._wq()
+        x = jnp.array(np.random.default_rng(4).normal(size=(3, 64)),
+                      jnp.float32)
+        ref = x @ dequantize(wq).T
+        for backend in (None, "dense", "bcq_xla", "bcq_xla_planes"):
+            y = execute_linear(x, wq, backend=backend)
+            assert np.allclose(y, ref, atol=0.1), backend
+
+    def test_execute_linear_dense_leaf(self):
+        w = _w()
+        x = jnp.ones((2, 64), jnp.float32)
+        y = execute_linear(x, w, backend=None)
+        assert np.allclose(y, x @ w.T, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantize_model: spec-driven PTQ + manifest + mixed precision
+# ---------------------------------------------------------------------------
+
+
+class TestQuantizeModel:
+    def test_uniform_spec_matches_legacy_path(self):
+        m, params = _model()
+        spec = QuantSpec(bits=3, group_size=32, iters=2)
+        qp, manifest = quantize_model(params, spec, m.axes())
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            qp_legacy = legacy_quantize_model(params, m.axes(), bits=3,
+                                              method="bcq", group_size=32,
+                                              iters=2)
+        leaves = jax.tree_util.tree_leaves(qp)
+        leaves_l = jax.tree_util.tree_leaves(qp_legacy)
+        assert len(leaves) == len(leaves_l)
+        for a, b in zip(leaves, leaves_l):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert manifest.n_layers > 0
+        assert manifest.avg_plane_bits == 3.0
+        assert manifest.quant_bytes < manifest.dense_bytes
+
+    def test_manifest_json(self, tmp_path):
+        m, params = _model()
+        qp, manifest = quantize_model(params, QuantSpec(bits=2, iters=1,
+                                                        group_size=32),
+                                      m.axes())
+        p = str(tmp_path / "manifest.json")
+        manifest.save(p)
+        d = json.load(open(p))
+        m2 = QuantManifest.from_dict(d)
+        assert m2.avg_plane_bits == manifest.avg_plane_bits
+        assert {l["path"] for l in m2.layers} == \
+            set(collect_linears(params, m.axes()))
+        assert all(l["plane_bits"] == 2 for l in m2.layers)
+
+    def test_fractional_bits_drive_mixed_precision(self):
+        m, params = _model()
+        spec = QuantSpec(bits=2.4, group_size=32, iters=1)
+        qp, manifest = quantize_model(params, spec, m.axes())
+        widths = {l["plane_bits"] for l in manifest.layers}
+        assert len(widths) > 1, "2.4-bit plan should mix bit-widths"
+        assert min(widths) >= 2
+        assert 2.0 < manifest.avg_plane_bits <= 2.4 + 1e-9
+        # model still runs end-to-end on the mixed tree
+        mq = Model(m.cfg.replace(quant=spec))
+        logits = mq.forward(qp, {"tokens": jnp.ones((1, 8), jnp.int32)})
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_overrides_pin_layers(self):
+        m, params = _model()
+        lin = collect_linears(params, m.axes())
+        pinned = sorted(lin)[0]
+        spec = QuantSpec(bits=2, iters=1, group_size=32,
+                         overrides={pinned: 4})
+        qp, manifest = quantize_model(params, spec, m.axes())
+        by_path = {l["path"]: l["plane_bits"] for l in manifest.layers}
+        assert by_path[pinned] == 4
+        assert all(b == 2 for p, b in by_path.items() if p != pinned)
+
+    def test_plan_bits_ternary_fixed(self):
+        m, params = _model()
+        lin = collect_linears(params, m.axes())
+        plan = plan_bits(lin, QuantSpec(format="ternary"))
+        assert set(plan.values()) == {2}
+
+    def test_unknown_override_path_rejected(self):
+        m, params = _model()
+        lin = collect_linears(params, m.axes())
+        with pytest.raises(ValueError, match="not quantizable"):
+            plan_bits(lin, QuantSpec(bits=3, overrides={"no/such/layer": 2}))
+
+    def test_overrides_rejected_for_fixed_plane_format(self):
+        m, params = _model()
+        lin = collect_linears(params, m.axes())
+        pinned = sorted(lin)[0]
+        with pytest.raises(ValueError, match="fixed"):
+            plan_bits(lin, QuantSpec(format="ternary",
+                                     overrides={pinned: 3}))
+
+    def test_zero_bits_rejected_with_clear_error(self):
+        m, params = _model()
+        with pytest.raises(ValueError, match="bits"):
+            quantize_model(params, QuantSpec(bits=0), m.axes())
+
+    def test_ternary_model_end_to_end(self):
+        m, params = _model()
+        spec = QuantSpec(format="ternary", group_size=32)
+        qp, manifest = quantize_model(params, spec, m.axes())
+        assert manifest.avg_plane_bits == 2.0
+        mq = Model(m.cfg.replace(quant=spec))
+        logits = mq.forward(qp, {"tokens": jnp.ones((1, 8), jnp.int32)})
+        assert bool(jnp.isfinite(logits).all())
+
+
+# ---------------------------------------------------------------------------
+# quantized checkpoints
+# ---------------------------------------------------------------------------
+
+
+class TestQuantCheckpoint:
+    def test_save_load_roundtrip(self, tmp_path):
+        m, params = _model()
+        spec = QuantSpec(bits=3, group_size=32, iters=1, backend="bcq_xla")
+        qp, manifest = quantize_model(params, spec, m.axes())
+        d = str(tmp_path / "qckpt")
+        save_quantized(d, qp, spec, manifest, arch=m.cfg.name)
+        qp2, spec2, manifest2, extra = load_quantized(d)
+        assert spec2 == spec
+        assert manifest2.avg_plane_bits == manifest.avg_plane_bits
+        assert extra["arch"] == m.cfg.name
+
+        flat1 = jax.tree_util.tree_leaves_with_path(qp)
+        flat2 = jax.tree_util.tree_leaves_with_path(qp2)
+        assert len(flat1) == len(flat2)
+        for (p1, l1), (p2, l2) in zip(flat1, flat2):
+            assert p1 == p2
+            assert l1.dtype == l2.dtype, p1
+            assert np.array_equal(np.asarray(l1), np.asarray(l2)), p1
+
+    def test_load_rejects_unquantized_ckpt(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+        d = str(tmp_path / "plain")
+        ckpt.save(d, 0, {"w": np.ones((2, 2))})
+        with pytest.raises(ValueError, match="not a quantized checkpoint"):
+            load_quantized(d)
+
+    def test_checkpoint_serves_identically_to_quantize_at_launch(
+            self, tmp_path):
+        """save -> load -> serve must be token-for-token identical to
+        quantize-at-launch (greedy)."""
+        m, params = _model()
+        spec = QuantSpec(bits=3, group_size=32, iters=1)
+        qp, _ = quantize_model(params, spec, m.axes())
+        d = str(tmp_path / "qckpt")
+        save_quantized(d, qp, spec, arch=m.cfg.name)
+        qp2, spec2, _, _ = load_quantized(d)
+
+        cfg = m.cfg.replace(quant=spec)
+        rng = np.random.default_rng(0)
+        def run(ps):
+            eng = ServeEngine(Model(cfg), ps, slots=2, cache_len=48,
+                              prefill_buckets=(16,))
+            reqs = [Request(uid=i,
+                            prompt=rng.integers(0, cfg.vocab_size, (int(l),)),
+                            max_new_tokens=5)
+                    for i, l in enumerate([7, 12])]
+            return {r.uid: r.out_tokens for r in eng.run(reqs)}
+
+        rng = np.random.default_rng(0)
+        out_launch = run(qp)
+        rng = np.random.default_rng(0)
+        out_loaded = run(qp2)
+        assert out_launch == out_loaded
+        assert all(len(t) == 5 for t in out_launch.values())
+
+
+# ---------------------------------------------------------------------------
+# legacy shims keep working (one-release deprecation window)
+# ---------------------------------------------------------------------------
+
+
+class TestLegacyShims:
+    def test_legacy_quantize_model_warns_but_works(self):
+        m, params = _model()
+        with pytest.warns(DeprecationWarning):
+            qp = legacy_quantize_model(params, m.axes(), bits=2,
+                                       method="rtn", group_size=32, iters=1)
+        mq = Model(m.cfg.replace(gemm_backend="bcq_xla"))
+        logits = mq.forward(qp, {"tokens": jnp.ones((1, 8), jnp.int32)})
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_legacy_linear_apply_backend_string(self):
+        from repro.core import linear_apply
+        wq = get_format("bcq").quantize(_w(), bits=2, group_size=16, iters=1)
+        x = jnp.ones((2, 64), jnp.float32)
+        y = linear_apply(wq, x, backend="bcq_xla")
+        assert np.allclose(y, x @ dequantize(wq).T, atol=0.1)
+
+    def test_config_backend_preference_shims(self):
+        cfg = get_reduced("opt_6_7b")
+        assert cfg.backend_preference == cfg.gemm_backend
+        assert cfg.quant_spec() is None
+        legacy = cfg.replace(gemm_backend="bcq_xla", quant_bits=3)
+        assert legacy.backend_preference == "bcq_xla"
+        assert legacy.quant_spec().bits == 3.0
+        spec = QuantSpec(bits=2, backend="lut_pallas")
+        assert cfg.replace(quant=spec).backend_preference == "lut_pallas"
+        assert cfg.replace(quant=spec).quant_spec() is spec
