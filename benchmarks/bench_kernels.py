@@ -13,6 +13,56 @@ from repro import tune as tune_mod
 from repro.core import bcq
 from repro.kernels.lut_gemm import lut_gemm, ref as lref
 from repro.kernels.bcq_matmul import bcq_matmul
+from repro.kernels.paged_attention import paged_attention, paged_decode_ref
+
+
+def _paged_decode_case(rng, *, b=4, h=8, hkv=4, d=32, nb=33, bs=8, pages=8):
+    """A scrambled paged-decode problem: ragged live lengths, -1 pads.
+    ``nb`` must cover the worst case (b * pages live blocks + trash)."""
+    assert nb > b * pages, "pool too small for worst-case live blocks"
+    k = jnp.array(rng.normal(size=(nb, bs, hkv, d)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(nb, bs, hkv, d)).astype(np.float32))
+    q = jnp.array(rng.normal(size=(b, h, d)).astype(np.float32))
+    tables = np.full((b, pages), -1, np.int32)
+    pos = np.full((nb, bs), -1, np.int32)
+    free = list(rng.permutation(np.arange(1, nb)))
+    positions = np.zeros(b, np.int32)
+    for row in range(b):
+        live = int(rng.integers(1, pages * bs))
+        positions[row] = live - 1
+        for j in range(-(-live // bs)):
+            blk = free.pop()
+            tables[row, j] = blk
+            pos[blk] = j * bs + np.arange(bs)
+    return (q, k, v, jnp.asarray(pos), jnp.asarray(tables),
+            jnp.asarray(positions))
+
+
+def _paged_attention_bench(rng):
+    """Fused paged decode (interpret) vs the gathered-view oracle:
+    correctness + timing + the pool-read fraction of the gathered view's
+    traffic (live blocks / (3 x table-addressable view))."""
+    q, k, v, pos, tables, positions = _paged_decode_case(rng)
+    want = paged_decode_ref(q, k, v, pos, tables, positions)
+    got = paged_attention(q, k, v, pos, tables, positions, interpret=True)
+    err = float(jnp.abs(got - want).max())
+    live = int((np.asarray(tables) >= 0).sum())
+    total = 3 * tables.shape[0] * tables.shape[1]
+    print(f"kernels,paged_attention_maxerr={err:.2e},"
+          f"kv_block_reads_fused={live},kv_block_reads_gathered={total},"
+          f"ratio={live/total:.3f}")
+    assert err < 1e-4
+    assert live < total
+    common.bench(
+        "kernels,paged_attention_interpret",
+        lambda: jax.block_until_ready(
+            paged_attention(q, k, v, pos, tables, positions, interpret=True)),
+        n=2)
+    common.bench(
+        "kernels,paged_gather_oracle",
+        lambda: jax.block_until_ready(
+            paged_decode_ref(q, k, v, pos, tables, positions)), n=2)
+    return err
 
 
 def _tuned_vs_default(rng):
@@ -61,6 +111,7 @@ def run():
                  n=2)
     common.bench("kernels,dense_oracle",
                  lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
+    _paged_attention_bench(rng)
     speedup = _tuned_vs_default(rng)
     return err1, err2, speedup
 

@@ -1,14 +1,22 @@
 """Pallas TPU kernels for FIGLUT.
 
-  lut_gemm    — paper-faithful LUT-based FP-INT GEMM (LUT build in VMEM +
-                keyed read-accumulate, hFFLUT symmetry; §III).
-  bcq_matmul  — beyond-paper TPU-native path: packed bit-planes dequantized
-                in VMEM + single MXU matmul per tile (DESIGN.md §2).
+  lut_gemm         — paper-faithful LUT-based FP-INT GEMM (LUT build in
+                     VMEM + keyed read-accumulate, hFFLUT symmetry; §III).
+  bcq_matmul       — beyond-paper TPU-native path: packed bit-planes
+                     dequantized in VMEM + single MXU matmul per tile
+                     (DESIGN.md §2).
+  paged_attention  — fused paged-KV decode attention: the block-table
+                     gather runs inside the kernel (scalar-prefetched
+                     index_map), so the serve engine's decode path never
+                     materializes the gathered cache view — the same
+                     "indirection stays on-chip" principle as the LUT
+                     kernel's keyed reads.
 
 Each kernel ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
 (pure-jnp oracle swept against in tests).
 """
 from .lut_gemm import lut_gemm
 from .bcq_matmul import bcq_matmul
+from .paged_attention import paged_attention
 
-__all__ = ["lut_gemm", "bcq_matmul"]
+__all__ = ["lut_gemm", "bcq_matmul", "paged_attention"]

@@ -1,0 +1,4 @@
+from .ops import divisor_clamp, paged_attention
+from .ref import paged_decode_ref
+
+__all__ = ["paged_attention", "paged_decode_ref", "divisor_clamp"]

@@ -1,0 +1,66 @@
+"""Public jit-friendly wrapper for the fused paged decode-attention kernel.
+
+Launch geometry (the kv-head tile ``block_h``) is resolved through
+:func:`repro.tune.dispatch.kernel_config` unless pinned by the caller —
+tuned JSON-cache entry if one exists for this (batch-bucket, Hkv,
+kv-capacity, dtype, rep, block_size, device) point, deterministic
+heuristic otherwise.  The oracle for every path is ``ref.paged_decode_ref``.
+
+The capability boundary (what falls back to the gathered-XLA path) lives
+in :func:`repro.tune.dispatch.kernel_supports` — int8-KV pools, MLA
+latent caches and sliding-window masking are not covered by this kernel
+yet and are routed to ``models.attention.decode_attend`` over
+``paged_view`` by the caller.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.tune import dispatch as _dispatch
+from repro.tune.space import divisor_clamp
+from . import paged_attention as _k
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    pos_pool: jax.Array, tables: jax.Array,
+                    positions: jax.Array, *, scale: Optional[float] = None,
+                    block_h: Optional[int] = None, interpret: bool = False,
+                    out_dtype=None) -> jax.Array:
+    """Fused decode attention straight from the paged KV pool.
+
+    q: [B, H, D]; k_pool/v_pool: [NB, BS, Hkv, D]; pos_pool: int32
+    [NB, BS]; tables: int32 [B, pages] (-1 = unallocated); positions:
+    int32 [B] (absolute position of each row's new token).
+    Returns [B, H, D] in ``out_dtype`` (default q.dtype), FP32 accum.
+    """
+    b, h, d = q.shape
+    nb, bs, hkv, dk = k_pool.shape
+    if dk != d:
+        raise ValueError(f"head_dim mismatch: q {d} vs pool {dk}")
+    if h % hkv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {hkv}")
+    if v_pool.shape != k_pool.shape or pos_pool.shape != (nb, bs):
+        raise ValueError("pool buffers disagree on [num_blocks, block_size]")
+    rep = h // hkv
+    pages = tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    if block_h is None:
+        cfg = _dispatch.kernel_config(
+            "paged_attention", b=b, m=hkv, n=pages * bs,
+            dtype=k_pool.dtype, mu=rep, group_size=bs, interpret=interpret)
+        block_h = cfg.block_h
+    block_h = divisor_clamp(block_h, hkv)
+
+    # scale in f32 THEN round to the storage dtype — identical rounding
+    # to decode_attend so fused and gathered paths stay interchangeable
+    qg = (q.reshape(b, hkv, rep, d).astype(jnp.float32) * scale
+          ).astype(k_pool.dtype)
+    out = _k.paged_attention_tiled(
+        qg, k_pool, v_pool, jnp.asarray(pos_pool, jnp.int32),
+        jnp.asarray(tables, jnp.int32), jnp.asarray(positions, jnp.int32),
+        block_size=bs, block_h=block_h, interpret=interpret)
+    return out.reshape(b, h, d).astype(out_dtype or q.dtype)

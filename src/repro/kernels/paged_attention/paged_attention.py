@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: fused paged-KV decode attention.
+
+The paged serving engine stores every layer's KV as a shared pool
+``[num_blocks, block_size, Hkv, D]`` plus per-sequence block tables
+``[B, max_blocks_per_seq]`` (see ``models/attention.py``).  The XLA
+fallback materializes a gathered per-sequence view of the pool before
+every decode step — a full-cache copy per layer, exactly the bandwidth
+waste FIGLUT's LUT dataflow exists to avoid.  This kernel moves the
+block-table lookup *into* the attention kernel, the same "indirection
+stays on-chip" principle as the LUT kernel's keyed reads: each grid step
+DMAs one physical pool block straight into VMEM via a block-table-driven
+``index_map`` (scalar-prefetched, so the address is known before the
+step runs) and folds it into a flash-style online softmax.  The gathered
+view is never built.
+
+Masking is identical to ``paged_view``'s liveness rule and happens on
+the scores in-kernel: a slot contributes iff
+
+  * its table entry is allocated (``table[b, j] >= 0``),
+  * its stored position equals its logical view index ``j * bs + i``
+    (recycled pool blocks still hold a dead sequence's positions — this
+    is what makes pool recycling safe), and
+  * its position is causally visible (``pos <= q_pos``).
+
+``pos == -1`` pads and trash-block contents fail the second check, so
+they are read but never attended — matching the gathered oracle.
+
+Grid: ``(B, Hkv / block_h, num_logical_blocks)`` with the page dim
+innermost; the output block (revisited across pages) doubles as the
+FP32 accumulator, with running max / sum in VMEM scratch.  Rows with no
+live slot at all (idle batch rows parked on the trash block) produce
+zeros — the engine discards their outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref,
+                       o_ref, m_ref, l_ref, *, block_size: int, pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                       # logical page (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0]                               # [bh, rep, d] (pre-scaled)
+    k = k_ref[0]                               # [bs, bh, d]
+    v = v_ref[0]
+    s = jnp.einsum("hrd,khd->hrk", q, k,
+                   preferred_element_type=jnp.float32)   # [bh, rep, bs]
+
+    # liveness mask (the paged_view rule, applied to scores)
+    entry = tables_ref[b, j]
+    qpos = qpos_ref[b]
+    logical = j * block_size + lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    slot_pos = pos_ref[...]                    # [1, bs]
+    ok = (entry >= 0) & (slot_pos == logical) & (slot_pos <= qpos)
+    okb = ok[:, None, :]                       # [1, 1, bs] -> broadcast
+    s = jnp.where(okb, s, NEG_INF)
+
+    # online softmax update; the output block is the FP32 accumulator
+    m_prev = m_ref[...]                        # [bh, rep]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # fully-masked-so-far rows have m == NEG_INF: exp(NEG_INF - NEG_INF)
+    # would be 1, so masked probabilities are forced to 0 explicitly
+    p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)             # [bh, rep]
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + p.sum(axis=-1)
+    pv = jnp.einsum("hrk,khd->hrd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+
+    @pl.when(j == pages - 1)
+    def _finish():
+        l = l_ref[...]
+        # rows with zero live slots keep l == 0 -> output 0 (discarded)
+        o_ref[0] = o_ref[0] / jnp.maximum(l, 1e-30)[..., None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "block_h", "interpret"),
+)
+def paged_attention_tiled(q, k_pool, v_pool, pos_pool, tables, positions, *,
+                          block_size: int, block_h: int,
+                          interpret: bool = False):
+    """Raw tiled kernel call (shapes already grouped / validated).
+
+    q: [B, Hkv, rep, D] in KV storage dtype, *pre-scaled* by the caller
+    (scale applied in f32 then rounded to the storage dtype — identical
+    rounding to ``decode_attend``).
+    k_pool / v_pool: [NB, BS, Hkv, D]; pos_pool: int32 [NB, BS].
+    tables: int32 [B, pages]; positions: int32 [B].
+    Returns f32 [B, Hkv, rep, D].  ``block_h`` must divide Hkv.
+    """
+    b, hkv, rep, d = q.shape
+    nb, bs = pos_pool.shape
+    pages = tables.shape[1]
+    assert hkv % block_h == 0, (hkv, block_h)
+    assert bs == block_size and k_pool.shape[:2] == (nb, bs)
+
+    kernel = functools.partial(_paged_attn_kernel, block_size=block_size,
+                               pages=pages)
+
+    # unallocated (-1) table entries fetch the trash block 0 — its
+    # contents are read but masked by the liveness rule above
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # tables, positions
+        grid=(b, hkv // block_h, pages),
+        in_specs=[
+            pl.BlockSpec((1, block_h, rep, d),
+                         lambda bi, hi, ji, tables, qpos: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_size, block_h, d),
+                         lambda bi, hi, ji, tables, qpos:
+                         (jnp.maximum(tables[bi, ji], 0), 0, hi, 0)),
+            pl.BlockSpec((1, block_size, block_h, d),
+                         lambda bi, hi, ji, tables, qpos:
+                         (jnp.maximum(tables[bi, ji], 0), 0, hi, 0)),
+            pl.BlockSpec((1, block_size),
+                         lambda bi, hi, ji, tables, qpos:
+                         (jnp.maximum(tables[bi, ji], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, rep, d),
+                               lambda bi, hi, ji, tables, qpos:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_h, rep), jnp.float32),   # running max
+            pltpu.VMEM((block_h, rep), jnp.float32),   # running sum
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), jnp.float32),
+        interpret=interpret,
+    )(tables, positions, q, k_pool, v_pool, pos_pool)

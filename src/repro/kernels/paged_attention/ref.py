@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for paged decode attention.
+
+``paged_decode_ref`` is the gather-then-attend formulation the fused
+kernel must match: materialize the per-sequence contiguous view of the
+pool (the ``paged_view`` semantics from ``models/attention.py``,
+re-derived here so the oracle is independent of the model layer), then
+run single-token attention with a full masked softmax and FP32
+accumulation.
+
+Liveness rule (identical to the kernel and to ``paged_view``): a view
+slot contributes iff its table entry is allocated, its stored position
+equals its logical view index, and it is causally visible
+(``pos <= q_pos``).  Rows with no live slot return zeros, matching the
+kernel's ``l == 0`` guard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_view(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """[NB, BS, ...] pool + [B, pages] tables -> [B, pages*BS, ...] view
+    (unallocated entries read the trash block; masking happens later)."""
+    b, pages = tables.shape
+    bs = pool.shape[1]
+    safe = jnp.maximum(tables, 0).reshape(-1)
+    g = jnp.take(pool, safe, axis=0)                    # [B*pages, BS, ...]
+    return g.reshape(b, pages * bs, *pool.shape[2:])
+
+
+def live_mask(pos_pool: jax.Array, tables: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    """bool [B, pages*BS]: slot live and causally visible for this step."""
+    b, pages = tables.shape
+    bs = pos_pool.shape[1]
+    vpos = gather_view(pos_pool, tables)                # [B, pages*BS]
+    allocated = jnp.repeat(tables >= 0, bs, axis=1)
+    iota = jnp.arange(pages * bs, dtype=jnp.int32)[None]
+    return allocated & (vpos == iota) & (vpos <= positions[:, None])
+
+
+def paged_decode_ref(q, k_pool, v_pool, pos_pool, tables, positions, *,
+                     scale=None, out_dtype=None):
+    """Gathered-view decode attention oracle.
+
+    q: [B, H, D]; k_pool/v_pool: [NB, BS, Hkv, D]; pos_pool: [NB, BS];
+    tables: int32 [B, pages]; positions: int32 [B].
+    Returns [B, H, D] (FP32 accumulation, cast to out_dtype or q.dtype).
+    """
+    b, h, d = q.shape
+    hkv = k_pool.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kv = gather_view(k_pool, tables)                    # [B, L, Hkv, D]
+    vv = gather_view(v_pool, tables)
+    ok = live_mask(pos_pool, tables, positions)         # [B, L]
+
+    qg = (q.reshape(b, hkv, rep, d).astype(jnp.float32) * scale
+          ).astype(k_pool.dtype)
+    s = jnp.einsum("bhrd,blhd->bhrl", qg, kv,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.where(ok[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = p.sum(-1)
+    out = jnp.einsum("bhrl,blhd->bhrd", p.astype(v_pool.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d).astype(out_dtype or q.dtype)

@@ -23,6 +23,10 @@ Default engine is the paged-KV engine (block pool + chunked-prefill
 scheduler + streaming + metrics); ``--engine slots`` falls back to the
 contiguous fixed-slot engine (required for SSM/hybrid, enc-dec and
 sliding-window models, which the paged cache does not cover).
+``--paged-kernel`` picks the paged decode-attention path: ``auto``
+(fused Pallas kernel where hardware-native), ``fused`` (force the
+kernel, interpret mode off-TPU) or ``gather`` (the paged_view
+fallback); unsupported variants (int8-KV, MLA) always gather.
 """
 import argparse
 import time
@@ -115,6 +119,14 @@ def main():
                     help="[paged engine] tokens per block")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="[paged engine] concurrent sequences")
+    ap.add_argument("--paged-kernel", default="auto",
+                    choices=["auto", "fused", "gather"],
+                    help="[paged engine] decode attention path: fused "
+                         "Pallas paged-attention kernel (auto: only where "
+                         "hardware-native; fused: force, interpret mode "
+                         "off-TPU) vs the gathered paged_view fallback; "
+                         "unsupported variants (int8-KV, MLA) always "
+                         "fall back to gather")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated")
     ap.add_argument("--metrics-json", default="",
@@ -233,7 +245,10 @@ def main():
                                max_batch=args.max_batch,
                                max_seq_len=args.max_seq_len or args.cache_len,
                                prefill_buckets=(16, 32, 64),
-                               pretune=args.pretune)
+                               pretune=args.pretune,
+                               paged_kernel=args.paged_kernel)
+        print(f"[launch.serve] paged-kernel={args.paged_kernel} -> "
+              f"decode path: {eng.decode_path}")
     else:
         eng = ServeEngine(model, params, slots=args.slots,
                           cache_len=args.cache_len,
@@ -258,6 +273,10 @@ def main():
               f"occupancy mean={s['occupancy']['mean']:.2f} "
               f"peak={s['occupancy']['peak']:.2f}  "
               f"preempted={s['counters']['preempted']}")
+        pk = s["paged_kernel"]
+        print(f"[launch.serve] decode path={pk['path']}  KV bytes/token: "
+              f"fused={pk['kv_bytes_per_token_fused']:.0f} "
+              f"gathered={pk['kv_bytes_per_token_gathered']:.0f}")
         if args.metrics_json:
             eng.metrics.to_json(args.metrics_json)
             print(f"[launch.serve] metrics -> {args.metrics_json}")

@@ -271,10 +271,30 @@ def empty_pos(pos_like):
 # The same ``pos``-based masking that drives the contiguous cache then
 # makes a gathered view of the pool indistinguishable from a contiguous
 # cache to the attention math.
+#
+# Decode (S == 1) does not need the gathered view at all: the fused
+# Pallas kernel (``kernels/paged_attention``) applies the identical
+# liveness mask inside the kernel while reading pool blocks directly
+# through the block table, so ``paged_view`` is only materialized on
+# the chunked-prefill path and on fallback variants (int8-KV, MLA,
+# sliding-window) — see ``paged_decode_attend``.
 
 
 def is_paged(cache: dict) -> bool:
     return "block_tables" in cache
+
+
+def kv_entry_bytes(cfg) -> int:
+    """KV-cache storage bytes per (token, layer) — the unit of the
+    decode-bandwidth accounting in serve metrics and benchmarks."""
+    if cfg.attention == "mla":
+        return (cfg.kv_lora_rank + cfg.qk_rope_head_dim) \
+            * jnp.dtype(cfg.dtype).itemsize
+    hkv = cfg.n_kv_heads * cfg.kv_replication
+    d = cfg.head_dim_
+    if cfg.kv_cache_bits == 8:
+        return 2 * hkv * d + 2 * hkv * 4        # int8 K/V + f32 scales
+    return 2 * hkv * d * jnp.dtype(cfg.dtype).itemsize
 
 
 def paged_view(cache: dict) -> dict:
@@ -424,14 +444,21 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
         vq, vs = _quantize_kv(v)
         cache = cache_insert(cache, {"k": kq, "v": vq,
                                      "k_scale": ks, "v_scale": vs}, cache_at)
-        kv = paged_view(cache) if is_paged(cache) else cache
         if s == 1:
-            out = decode_attend(q, kv, positions,
-                                window=cfg.sliding_window)
+            if is_paged(cache):
+                # int8 pools are a gathered-fallback variant inside the
+                # router (the fused kernel has no scale fold yet)
+                out = paged_decode_attend(q, cache, positions,
+                                          window=cfg.sliding_window,
+                                          mode=cfg.paged_kernel)
+            else:
+                out = decode_attend(q, cache, positions,
+                                    window=cfg.sliding_window)
         elif is_paged(cache):
             # chunked prefill: earlier chunks are only in the cache, so
             # attend over the dequantized view (unlike the whole-prompt
             # path below, the cache is NOT empty here)
+            kv = paged_view(cache)
             kd = (kv["k"].astype(jnp.float32)
                   * kv["k_scale"][..., None]).astype(k.dtype)
             vd = (kv["v"].astype(jnp.float32)
@@ -445,10 +472,15 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
             out = blockwise_attention(q, k, v, positions, positions,
                                       causal=True, window=cfg.sliding_window)
     elif s == 1:
-        # decode fast path: contract in cache layout, bf16 reads
+        # decode fast path: contract in cache layout, bf16 reads; paged
+        # caches route through the fused-vs-gathered kernel selector
         cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
-        kv = paged_view(cache) if is_paged(cache) else cache
-        out = decode_attend(q, kv, positions, window=cfg.sliding_window)
+        if is_paged(cache):
+            out = paged_decode_attend(q, cache, positions,
+                                      window=cfg.sliding_window,
+                                      mode=cfg.paged_kernel)
+        else:
+            out = decode_attend(q, cache, positions, window=cfg.sliding_window)
     else:
         cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
         kv = paged_view(cache) if is_paged(cache) else cache
@@ -508,6 +540,88 @@ def decode_attend(q, cache, positions, *, window=0, scale=None):
                      preferred_element_type=jnp.float32)
     out = shard_act(out, ("batch", "kv_heads", None, "head_dim"))
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+PAGED_KERNEL_MODES = ("auto", "fused", "gather")
+
+
+def _fused_selected(mode: str, supported: bool) -> bool:
+    """The single fused-vs-gather routing rule, shared by the device
+    path (:func:`paged_decode_attend`) and the host mirror
+    (:func:`paged_kernel_mode`) so the engine's labeling/metrics can
+    never drift from the path the decode step actually takes: explicit
+    "fused" runs wherever the kernel is supported (interpret mode
+    off-TPU); "auto" additionally requires it to be hardware-native."""
+    if mode not in PAGED_KERNEL_MODES:
+        raise ValueError(f"paged_kernel must be one of {PAGED_KERNEL_MODES}, "
+                         f"got {mode!r}")
+    if mode == "gather" or not supported:
+        return False
+    return mode == "fused" or jax.default_backend() == "tpu"
+
+
+def fused_paged_supported(cache: dict, n_heads: int, *, window: int = 0) -> bool:
+    """Can the fused Pallas kernel serve a decode step on this paged
+    cache leaf?  MLA latent caches (no ``k``/``v`` leaves), int8-KV
+    pools and sliding-window masking fall back to the gathered path —
+    the capability boundary lives in ``tune.dispatch.kernel_supports``.
+    """
+    from repro.tune.dispatch import kernel_supports
+    if not is_paged(cache) or "k" not in cache:
+        return False
+    bs = cache["pos"].shape[1]
+    pages = cache["block_tables"].shape[-1]
+    return kernel_supports(
+        "paged_attention", m=n_heads, n=pages * bs, group_size=bs,
+        n_kv_heads=cache["k"].shape[2], kv_dtype=cache["k"].dtype,
+        window=window)
+
+
+def paged_kernel_mode(cfg, *, block_size: int, pages: int) -> str:
+    """Host-side mirror of the decode routing decision: resolve
+    ``cfg.paged_kernel`` to the path ("fused" | "gather") a decode step
+    on this config's paged cache will actually take.  Used by the serve
+    engine for labeling and KV-bandwidth accounting — the device-side
+    decision in :func:`paged_decode_attend` follows the same rule."""
+    from repro.tune.dispatch import kernel_supports
+    ok = kernel_supports(
+        "paged_attention", m=cfg.n_heads, n=pages * block_size,
+        group_size=block_size,
+        n_kv_heads=cfg.n_kv_heads * cfg.kv_replication,
+        kv_dtype="int8" if cfg.kv_cache_bits == 8 else cfg.dtype,
+        window=cfg.sliding_window, latent=cfg.attention == "mla")
+    return "fused" if _fused_selected(cfg.paged_kernel, ok) else "gather"
+
+
+def paged_decode_attend(q, cache, positions, *, window=0, scale=None,
+                        mode="auto"):
+    """Single-token attention on a PAGED cache.
+
+    When the fused Pallas kernel is selected, the block-table gather
+    happens *inside* the kernel (scalar-prefetched index_map) and the
+    contiguous ``paged_view`` is never materialized — the decode path
+    reads each live pool block exactly once instead of copying the whole
+    table-addressable view per layer.  Otherwise: gather (``paged_view``)
+    + :func:`decode_attend`, the reference path.
+
+    mode: "auto" (fused only where it is the hardware-native path, i.e.
+    on TPU), "fused" (force the kernel; interpret mode off-TPU), or
+    "gather".  Variants the kernel does not cover (int8-KV, MLA,
+    sliding-window) fall back to the gathered path in every mode.
+    """
+    use = _fused_selected(mode, fused_paged_supported(cache, q.shape[2],
+                                                      window=window))
+    if use:
+        from repro.core.lut_gemm import INTERPRET
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(
+            q[:, 0], cache["k"], cache["v"], cache["pos"],
+            cache["block_tables"], positions[:, 0], scale=scale,
+            interpret=INTERPRET)
+        out = shard_act(out[:, None], ("batch", None, "heads", None))
+        return out
+    kv = paged_view(cache)
+    return decode_attend(q, kv, positions, window=window, scale=scale)
 
 
 def cross_kv(params, cfg, enc_out, backend=None):

@@ -98,13 +98,27 @@ class PagedServeEngine:
     ``max_batch`` concurrent sequences; each sequence holds only the
     blocks its tokens actually occupy, so total admitted context can
     exceed ``max_batch`` worst-case reservations by the pool ratio.
+
+    ``paged_kernel`` ("auto" | "fused" | "gather", default: the model
+    config's setting) picks the decode attention path: the fused Pallas
+    kernel reads live pool blocks directly through the block table,
+    while "gather" materializes the contiguous ``paged_view`` per layer
+    (the reference path).  The resolved path is ``self.decode_path`` and
+    both paths' analytic KV traffic is tracked per decode step in
+    ``metrics`` (``kv_bytes_per_token_{fused,gathered}``).
     """
 
     def __init__(self, model: Model, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_batch: int = 8,
                  max_seq_len: int = 0, prefill_buckets=(32, 128, 512),
                  rng_seed: int = 0, pretune: bool = False,
+                 paged_kernel: Optional[str] = None,
                  clock=time.perf_counter):
+        from repro.models.attention import kv_entry_bytes, paged_kernel_mode
+        if paged_kernel is not None and paged_kernel != model.cfg.paged_kernel:
+            # the mode is part of the (jitted) decode graph, so it lives
+            # on the config; an engine-level override rebuilds the Model
+            model = Model(model.cfg.replace(paged_kernel=paged_kernel))
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -112,6 +126,9 @@ class PagedServeEngine:
         self.buckets = sorted(prefill_buckets)
         max_seq_len = max_seq_len or model.cfg.max_seq_len
         self.max_blocks_per_seq = -(-max_seq_len // block_size)
+        self.decode_path = paged_kernel_mode(
+            model.cfg, block_size=block_size, pages=self.max_blocks_per_seq)
+        self._kv_entry_bytes = kv_entry_bytes(model.cfg)
         if pretune:
             _pretune(model, params, [1, max_batch, *self.buckets])
         self.cache = model.init_paged_cache(max_batch, num_blocks,
@@ -148,6 +165,24 @@ class PagedServeEngine:
             self.metrics.on_fail(seq.req.uid)
         else:
             self.metrics.on_complete(seq.req.uid)
+
+    def _decode_kv_bytes(self, decode) -> tuple:
+        """Analytic per-step KV traffic of both decode paths (bytes).
+
+        fused: every *live* pool block is read exactly once per layer
+        (the kernel DMAs blocks through the block table).
+        gathered: ``paged_view`` reads B x pages pool blocks (unallocated
+        entries still fetch the trash block), writes the contiguous view,
+        and ``decode_attend`` reads it back — 3 view-sized copies per
+        layer regardless of how few blocks are actually live.  A traffic
+        model, not a measurement; benchmarks report it per token."""
+        per_layer = self.block_size * self._kv_entry_bytes
+        live = sum(len(seq.table) for seq in decode)
+        layers = self.model.cfg.n_layers
+        fused = live * per_layer * layers
+        gathered = 3 * self.max_batch * self.max_blocks_per_seq \
+            * per_layer * layers
+        return fused, gathered
 
     def _emit_token(self, seq, tok: int) -> None:
         _emit(seq.req, tok)
@@ -190,6 +225,9 @@ class PagedServeEngine:
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(tokens), cache, jnp.asarray(posv))
             logits = np.asarray(logits)
+            fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
+            self.metrics.on_decode_step(len(plan.decode), fused_b,
+                                        gathered_b, self.decode_path)
             for seq in plan.decode:
                 seq.kv_len += 1
                 tok = _sample(logits[seq.row], seq.req.temperature, self.rng)

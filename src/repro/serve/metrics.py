@@ -66,7 +66,10 @@ class ServeMetrics:
         self.per_token = Histogram()
         self.counters = {"submitted": 0, "admitted": 0, "completed": 0,
                          "failed": 0, "preempted": 0, "rejected": 0,
-                         "tokens_out": 0, "prefill_chunks": 0, "ticks": 0}
+                         "tokens_out": 0, "prefill_chunks": 0, "ticks": 0,
+                         "decode_steps": 0, "decode_tokens": 0,
+                         "kv_bytes_fused_est": 0, "kv_bytes_gathered_est": 0}
+        self.decode_path: Optional[str] = None   # "fused" | "gather"
         self.occupancy: List[float] = []       # one sample per tick
         self.active: List[int] = []            # concurrent running seqs
         self._t_submit: Dict[int, float] = {}
@@ -111,6 +114,19 @@ class ServeMetrics:
     def on_prefill_chunk(self) -> None:
         self.counters["prefill_chunks"] += 1
 
+    def on_decode_step(self, tokens: int, fused_bytes: int,
+                       gathered_bytes: int, path: str) -> None:
+        """One decode batch: ``tokens`` rows advanced, plus the analytic
+        KV traffic of BOTH paged decode paths for this step (the engine
+        computes them from live block counts; see
+        ``PagedServeEngine._decode_kv_bytes``).  ``path`` is the one
+        actually taken."""
+        self.counters["decode_steps"] += 1
+        self.counters["decode_tokens"] += int(tokens)
+        self.counters["kv_bytes_fused_est"] += int(fused_bytes)
+        self.counters["kv_bytes_gathered_est"] += int(gathered_bytes)
+        self.decode_path = path
+
     # ------------------------------------------------------------------
     def throughput(self) -> float:
         dt = self.clock() - self._t0
@@ -119,6 +135,7 @@ class ServeMetrics:
     def summary(self) -> Dict:
         occ = np.asarray(self.occupancy) if self.occupancy else np.zeros(1)
         act = np.asarray(self.active) if self.active else np.zeros(1)
+        ndec = max(self.counters["decode_tokens"], 1)
         return {
             "counters": dict(self.counters),
             "ttft_s": self.ttft.summary(),
@@ -127,6 +144,13 @@ class ServeMetrics:
             "occupancy": {"mean": float(occ.mean()),
                           "peak": float(occ.max())},
             "peak_active": int(act.max()),
+            "paged_kernel": {
+                "path": self.decode_path,
+                "kv_bytes_per_token_fused":
+                    self.counters["kv_bytes_fused_est"] / ndec,
+                "kv_bytes_per_token_gathered":
+                    self.counters["kv_bytes_gathered_est"] / ndec,
+            },
         }
 
     def to_json(self, path: Optional[str] = None) -> str:

@@ -157,7 +157,13 @@ class Scheduler:
                 plan.rejected.append(req)
                 continue
             target = len(req.prompt) + len(req.out_tokens)
-            need_now = self.pool.blocks_for(target) + self.decode_reserve
+            # decode headroom, capped by the sequence's FINAL footprint:
+            # a prompt that fills its last block only partially decodes
+            # into that block, so demanding an extra reserve block it
+            # will never use can wedge admission forever when the final
+            # footprint equals pool capacity (found by the fuzz suite)
+            need_now = min(self.pool.blocks_for(target) + self.decode_reserve,
+                           need_total)
             if self.pool.free_blocks - reserved < need_now:
                 break
             reserved += need_now

@@ -19,7 +19,7 @@ distinct linear-layer problem of a model config and persists the winners
 forces the heuristic path, ``auto`` tunes on cache miss on-device).
 """
 from .space import (KERNELS, READ_MODES, KernelConfig, candidate_configs,
-                    clamp_config, heuristic_config)
+                    clamp_config, divisor_clamp, heuristic_config)
 from .cache import (TuneCache, bucket_batch, cache_key, default_cache,
                     device_tag, reset_default_cache)
 from .measure import measure
@@ -29,7 +29,7 @@ from .autotune import (TuneResult, Timing, collect_bcq_specs, pretune_params,
 
 __all__ = [
     "KERNELS", "READ_MODES", "KernelConfig", "candidate_configs",
-    "clamp_config", "heuristic_config",
+    "clamp_config", "divisor_clamp", "heuristic_config",
     "TuneCache", "bucket_batch", "cache_key", "default_cache", "device_tag",
     "reset_default_cache",
     "measure",

@@ -36,19 +36,44 @@ def tune_mode() -> str:
 
 
 def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
-                    bits: Optional[int] = None) -> bool:
-    """Capability probe used by the quant backend registry
-    (:mod:`repro.quant.backends`): can this Pallas kernel launch a
-    ``[m, n]``-weight problem at all?
+                    bits: Optional[int] = None, **caps) -> bool:
+    """Capability probe: can this Pallas kernel launch the problem at all?
 
-    The constraints mirror the op wrappers' padding math: plane packing
-    is byte-granular along the input dim (group_size % 8 == 0, which also
+    For the GEMM kernels (callers: the quant backend registry,
+    :mod:`repro.quant.backends`) ``(m, n)`` are the weight dims and the
+    constraints mirror the op wrappers' padding math: plane packing is
+    byte-granular along the input dim (group_size % 8 == 0, which also
     covers the LUT kernel's mu=4 sub-group split), and the bit-serial
     loop streams at most 8 planes.
+
+    For ``paged_attention`` (caller: ``models.attention``'s paged decode
+    router) the dims are remapped — ``m`` is the total q-head count,
+    ``n`` the per-sequence KV capacity, ``group_size`` the pool block
+    size — and ``caps`` carries the variant axes the kernel does not
+    cover yet, which fall back to the gathered-XLA path:
+
+      * ``n_kv_heads``  — q heads must group evenly over kv heads;
+      * ``kv_dtype``    — float pools only (int8-KV needs the per-slot
+        scale fold the gathered ``decode_attend`` already does);
+      * ``window``      — sliding-window masking (ring caches are not
+        paged, so this is only reachable through direct op calls);
+      * ``latent``      — MLA absorbed decode stays on the gathered view.
     """
     from .space import KERNELS
     if kernel not in KERNELS:
         return False
+    if kernel == "paged_attention":
+        hkv = int(caps.get("n_kv_heads", m) or m)
+        if m < 1 or hkv < 1 or m % hkv or n < 1 or group_size < 1:
+            return False
+        if caps.get("window", 0) or caps.get("latent", False):
+            return False
+        dt = caps.get("kv_dtype")
+        if dt is not None:
+            import jax.numpy as jnp
+            if not jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+                return False
+        return True
     if m < 1 or n < 1 or group_size < 8 or group_size % 8:
         return False
     if bits is not None and not 1 <= bits <= 8:

@@ -23,7 +23,7 @@ import dataclasses
 import itertools
 from typing import Sequence
 
-KERNELS = ("lut_gemm", "bcq_matmul")
+KERNELS = ("lut_gemm", "bcq_matmul", "paged_attention")
 
 READ_MODES = ("onehot", "select", "gather")
 
@@ -31,6 +31,7 @@ READ_MODES = ("onehot", "select", "gather")
 _BLOCK_B = (8, 16, 32)
 _BLOCK_M = (64, 128, 256)
 _BLOCK_N = (256, 512, 1024)
+_BLOCK_H = (0, 1, 2, 4, 8)        # paged_attention kv-head tile (0 = all)
 
 
 def _round_up(v: int, m: int) -> int:
@@ -40,17 +41,21 @@ def _round_up(v: int, m: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
     """One launch configuration.  ``read_mode``/``half_lut`` only affect
-    the ``lut_gemm`` kernel; they are normalized to the defaults for
-    ``bcq_matmul`` so configs compare/dedupe cleanly."""
+    the ``lut_gemm`` kernel and ``block_h`` (kv heads per grid step)
+    only the ``paged_attention`` kernel; fields irrelevant to a kernel
+    are normalized to their defaults so configs compare/dedupe cleanly."""
 
     block_b: int = 8
     block_m: int = 128
     block_n: int = 512
     read_mode: str = "onehot"
     half_lut: bool = True
+    block_h: int = 0                 # paged_attention: kv-head tile (0 = all)
 
     def to_kwargs(self, kernel: str) -> dict:
         """kwargs for the kernel's public op wrapper."""
+        if kernel == "paged_attention":
+            return dict(block_h=self.block_h)
         kw = dict(block_b=self.block_b, block_m=self.block_m,
                   block_n=self.block_n)
         if kernel == "lut_gemm":
@@ -66,10 +71,31 @@ class KernelConfig:
         return cls(**{k: v for k, v in d.items() if k in fields})
 
 
+def divisor_clamp(block_h: int, hkv: int) -> int:
+    """Largest divisor of ``hkv`` that is <= block_h (0 -> all heads).
+
+    The single clamp rule for the paged_attention kv-head tile — used by
+    both ``clamp_config`` (dispatch side) and the op wrapper, so a tuned
+    cache entry always describes the launch actually run."""
+    if block_h <= 0 or block_h >= hkv:
+        return hkv
+    while hkv % block_h:
+        block_h -= 1
+    return max(block_h, 1)
+
+
 def clamp_config(cfg: KernelConfig, kernel: str, *, b: int, m: int, n: int,
                  group_size: int) -> KernelConfig:
     """Snap a config onto a concrete problem so the tiled kernel's
-    divisibility asserts hold (mirrors the padding math in ops.py)."""
+    divisibility asserts hold (mirrors the padding math in ops.py).
+
+    For ``paged_attention`` the problem dims are remapped: ``m`` is the
+    kv-head count, ``n`` the per-sequence KV capacity and ``group_size``
+    the pool block size; the only live axis is ``block_h`` (clamped to a
+    divisor of the head count) and the GEMM tile fields are normalized
+    so configs dedupe."""
+    if kernel == "paged_attention":
+        return KernelConfig(block_h=divisor_clamp(cfg.block_h, max(m, 1)))
     n_pad = _round_up(max(n, 1), group_size)
     block_n = _round_up(min(cfg.block_n, n_pad), group_size)
     block_m = _round_up(min(cfg.block_m, _round_up(max(m, 1), 8)), 8)
@@ -91,6 +117,11 @@ def heuristic_config(kernel: str, *, b: int, m: int, n: int,
     """
     if kernel not in KERNELS:
         raise ValueError(f"unknown kernel {kernel!r}; known: {KERNELS}")
+    if kernel == "paged_attention":
+        # decode head counts are small: all kv heads per grid step keeps
+        # the grid minimal and the q tile resident
+        return clamp_config(KernelConfig(block_h=0), kernel, b=b, m=m, n=n,
+                            group_size=group_size)
     block_b = 8 if b <= 8 else (16 if b <= 16 else 32)
     base = KernelConfig(block_b=block_b, block_m=128, block_n=512,
                         read_mode="onehot", half_lut=True)
@@ -109,14 +140,24 @@ def candidate_configs(kernel: str, *, b: int, m: int, n: int, mu: int = 4,
     """
     if kernel not in KERNELS:
         raise ValueError(f"unknown kernel {kernel!r}; known: {KERNELS}")
+    out = [heuristic_config(kernel, b=b, m=m, n=n, mu=mu,
+                            group_size=group_size)]
+    seen = {out[0]}
+    if kernel == "paged_attention":
+        for bh in _BLOCK_H:
+            cfg = clamp_config(KernelConfig(block_h=bh), kernel,
+                               b=b, m=m, n=n, group_size=group_size)
+            if cfg not in seen:
+                seen.add(cfg)
+                out.append(cfg)
+        if max_candidates and len(out) > max_candidates:
+            out = out[:max_candidates]
+        return out
     if kernel == "lut_gemm" and group_size % mu:
         raise ValueError(f"group_size {group_size} not divisible by mu {mu}")
     modes = READ_MODES if kernel == "lut_gemm" else ("onehot",)
     halves = (True, False) if kernel == "lut_gemm" else (True,)
 
-    out = [heuristic_config(kernel, b=b, m=m, n=n, mu=mu,
-                            group_size=group_size)]
-    seen = {out[0]}
     for bb, bm, bn, rm, hl in itertools.product(
             _BLOCK_B, _BLOCK_M, _BLOCK_N, modes, halves):
         cfg = clamp_config(

@@ -1,0 +1,195 @@
+"""Hypothesis property tests for the paged-KV block allocator and the
+trash-block write routing.
+
+Invariants (the ones the paged cache's correctness rests on):
+
+  * random admit/extend/preempt/free sequences never double-book a
+    block, never hand out the reserved trash block 0, and never leak —
+    the pool's books balance after every operation and drain to empty;
+  * random scheduler walks keep every running sequence's block table
+    disjoint from every other's and free of block 0;
+  * device-side ``_paged_insert`` routes every invalid write (negative
+    position, unallocated / out-of-range logical block) to the trash
+    block: no write ever aliases a block owned by a live sequence.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -e .[dev]) — the suite "
+           "must collect without it")
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.models import attention as attn
+from repro.serve import BlockPool, Request, Scheduler
+
+_SET = dict(max_examples=40, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# BlockPool: alloc / free walks
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def pool_ops(draw):
+    num_blocks = draw(st.integers(3, 33))
+    ops = draw(st.lists(
+        st.tuples(st.sampled_from(["alloc", "free_some", "free_all"]),
+                  st.integers(0, 7),        # owner id
+                  st.integers(1, 6)),       # alloc count / free count
+        min_size=1, max_size=40))
+    return num_blocks, ops
+
+
+@given(pool_ops())
+@settings(**_SET)
+def test_pool_never_double_books_or_leaks(case):
+    num_blocks, ops = case
+    pool = BlockPool(num_blocks, block_size=4)
+    held = {}                                 # owner -> [blocks]
+    for op, owner, n in ops:
+        if op == "alloc":
+            got = pool.alloc(owner, n)
+            if got is None:                   # all-or-nothing: no strand
+                assert n > pool.free_blocks
+            else:
+                assert 0 not in got
+                for b in got:
+                    for o, blks in held.items():
+                        assert b not in blks, f"block {b} double-booked"
+                held.setdefault(owner, []).extend(got)
+        elif op == "free_some" and held.get(owner):
+            take = held[owner][:n]
+            pool.free(take, owner)
+            held[owner] = held[owner][len(take):]
+        elif op == "free_all" and held.get(owner):
+            pool.free(held.pop(owner), owner)
+        pool.check()
+        assert pool.used_blocks == sum(len(b) for b in held.values())
+    for owner, blks in list(held.items()):    # drain: nothing leaked
+        pool.free(blks, owner)
+    pool.check()
+    assert pool.free_blocks == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: random admit/extend/preempt walks (model-free)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def sched_cases(draw):
+    num_blocks = draw(st.integers(4, 24))
+    block_size = draw(st.sampled_from([2, 4, 8]))
+    rows = draw(st.integers(1, 4))
+    reqs = draw(st.lists(
+        st.tuples(st.integers(1, 40),         # prompt len
+                  st.integers(1, 8)),         # max_new_tokens
+        min_size=1, max_size=8))
+    return num_blocks, block_size, rows, reqs
+
+
+@given(sched_cases())
+@settings(**_SET)
+def test_scheduler_tables_stay_disjoint_and_drain(case):
+    num_blocks, block_size, rows, reqs = case
+    pool = BlockPool(num_blocks, block_size)
+    sched = Scheduler(pool, rows=rows, buckets=(8,),
+                      max_blocks_per_seq=max(num_blocks - 1, 1))
+    for i, (plen, new) in enumerate(reqs):
+        sched.submit(Request(uid=i, prompt=np.zeros(plen, np.int32),
+                             max_new_tokens=new))
+    for _ in range(400):
+        if not sched.has_work():
+            break
+        plan = sched.plan_tick()
+        seen = set()
+        for seq in sched.running:
+            assert 0 not in seq.table, "trash block handed to a sequence"
+            tset = set(seq.table)
+            assert len(tset) == len(seq.table)
+            assert not (tset & seen), "block shared between live sequences"
+            seen |= tset
+        pool.check()
+        for seq in plan.failed:
+            sched.finish(seq)
+            seq.req.done = True
+        for seq in plan.decode:
+            seq.kv_len += 1
+            seq.req.out_tokens.append(0)
+            if len(seq.req.out_tokens) >= seq.req.max_new_tokens:
+                sched.finish(seq)
+                seq.req.done = True
+        if plan.prefill is not None:
+            seq = plan.prefill.seq
+            seq.kv_len += plan.prefill.length
+            if seq.kv_len >= seq.prefill_target:
+                seq.req.out_tokens.append(0)
+                if len(seq.req.out_tokens) >= seq.req.max_new_tokens:
+                    sched.finish(seq)
+                    seq.req.done = True
+    assert not sched.has_work(), "scheduler wedged"
+    pool.check()
+    assert pool.free_blocks == pool.capacity, "blocks leaked at drain"
+
+
+# ---------------------------------------------------------------------------
+# device side: trash-block routing never aliases a live block
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def insert_cases(draw):
+    nb = draw(st.integers(3, 10))
+    bs = draw(st.sampled_from([2, 4]))
+    pages = draw(st.integers(1, 4))
+    n_alloc = draw(st.integers(0, min(pages, nb - 1)))
+    at = draw(st.integers(-2 * bs, (pages + 2) * bs))   # incl. invalid
+    s = draw(st.integers(1, 2 * bs))
+    seed = draw(st.integers(0, 999))
+    return nb, bs, pages, n_alloc, at, s, seed
+
+
+@given(insert_cases())
+@settings(**_SET)
+def test_paged_insert_only_touches_owned_or_trash(case):
+    nb, bs, pages, n_alloc, at, s, seed = case
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(np.arange(1, nb))[:n_alloc]
+    table = np.full((1, pages), -1, np.int32)
+    table[0, :n_alloc] = perm
+    cache = {
+        "k": jnp.zeros((nb, bs, 2, 4), jnp.float32),
+        "pos": jnp.full((nb, bs), -1, jnp.int32),
+        "block_tables": jnp.asarray(table),
+    }
+    upd = jnp.asarray(rng.normal(size=(1, s, 2, 4)), jnp.float32)
+    new = attn.cache_insert(cache, {"k": upd}, at)
+    touched = np.nonzero(
+        np.abs(np.asarray(new["k"]) - np.asarray(cache["k"])).reshape(
+            nb, -1).max(1))[0]
+    pos_touched = np.nonzero(
+        (np.asarray(new["pos"]) != np.asarray(cache["pos"])).reshape(
+            nb, -1).max(1))[0]
+    allowed = set(perm.tolist()) | {0}        # owned blocks + trash
+    for blk in (*touched, *pos_touched):
+        assert blk in allowed, f"write aliased unowned block {blk}"
+    # positions recorded in owned blocks must be the logical positions
+    # of this write; the trash block never records a live position
+    newpos = np.asarray(new["pos"])
+    write_lo, write_hi = at, at + s
+    for j, blk in enumerate(table[0]):
+        if blk < 0:
+            continue
+        got = newpos[blk]
+        for i, p in enumerate(got):
+            logical = j * bs + i
+            if write_lo <= logical < write_hi and logical >= 0:
+                assert p == logical
+            else:
+                assert p == -1
+    assert (newpos[0] == -1).all(), "trash block recorded a live position"

@@ -144,18 +144,34 @@ class TestScheduler:
         assert list(sched.waiting) == [reqs[2]]
 
     def test_admission_blocked_by_budget_no_skip_ahead(self):
-        # head fits the pool eventually (3 blocks = capacity) but not the
-        # current budget (3 prefill + 1 reserve > 3 free); the smaller
-        # request behind it must NOT jump the queue (FCFS)
-        sched, pool = self._sched(num_blocks=4, block_size=4, rows=2,
-                                  max_blocks_per_seq=4)
-        sched.submit(Request(uid=0, prompt=np.zeros(9, np.int32),
-                             max_new_tokens=2))
-        sched.submit(Request(uid=1, prompt=np.zeros(2, np.int32),
-                             max_new_tokens=1))
+        # A consumes most of the tick budget; B (the new queue head)
+        # doesn't fit the residual, and the smaller C behind it — which
+        # WOULD fit — must NOT jump the queue (FCFS)
+        sched, pool = self._sched(num_blocks=7, block_size=4, rows=3,
+                                  max_blocks_per_seq=6)
+        sched.submit(Request(uid=0, prompt=np.zeros(16, np.int32),
+                             max_new_tokens=4))     # budget 5 blocks
+        sched.submit(Request(uid=1, prompt=np.zeros(9, np.int32),
+                             max_new_tokens=2))     # needs 3 > 1 left
+        sched.submit(Request(uid=2, prompt=np.zeros(2, np.int32),
+                             max_new_tokens=1))     # needs 1 — would fit
         plan = sched.plan_tick()
-        assert plan.admitted == [] and len(sched.waiting) == 2
-        assert pool.free_blocks == 3
+        assert [s.uid for s in plan.admitted] == [0]
+        assert [r.uid for r in sched.waiting] == [1, 2]
+
+    def test_admission_reserve_capped_by_final_footprint(self):
+        # final footprint == pool capacity exactly: the decode-headroom
+        # reserve must not push the demand past capacity, or the request
+        # can never be admitted (wedge found by the fuzz suite)
+        sched, pool = self._sched(num_blocks=4, block_size=8, rows=1,
+                                  max_blocks_per_seq=3)
+        req = Request(uid=0, prompt=np.zeros(21, np.int32), max_new_tokens=3)
+        sched.submit(req)
+        finished, _ = _drive(sched)
+        assert req.done and req.error is None
+        assert len(req.out_tokens) == 3
+        pool.check()
+        assert pool.free_blocks == pool.capacity
 
     def test_impossible_request_rejected_not_queued_forever(self):
         sched, pool = self._sched(num_blocks=4, block_size=4,
@@ -368,6 +384,7 @@ def test_paged_engine_scan_stacked_layers():
     assert _by_uid(done_p) == _by_uid(done_c)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["phi4_mini_3_8b", "minicpm3_4b"])
 def test_paged_engine_preemption_still_matches(arch):
     """A pool too small for the whole stream forces preempt-by-recompute;
@@ -527,3 +544,54 @@ def test_contiguous_engine_streams_too():
     done = ServeEngine(m, params, slots=1, cache_len=32,
                        prefill_buckets=(8,)).run(reqs)
     assert seen == done[0].out_tokens and len(seen) == 3
+
+
+# ---------------------------------------------------------------------------
+# fuzz: random streams keep paged == contiguous and the books balanced
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fuzz_paged_matches_contiguous_under_pressure(seed):
+    """Random prompt lengths / arrival orders / generation budgets on a
+    pool small enough to force preemption: the paged engine must stay
+    token-for-token equal to the contiguous-slot oracle, the metrics
+    token counts must sum to the tokens actually emitted, and the pool
+    must drain clean."""
+    m, params = _model()
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(4, 8))
+    lens = rng.integers(1, 28, n).tolist()
+    news = rng.integers(1, 7, n).tolist()
+    order = rng.permutation(n).tolist()
+
+    def mk():
+        r = np.random.default_rng(seed)
+        reqs = [Request(uid=i, prompt=r.integers(0, m.cfg.vocab_size,
+                                                 (int(lens[i]),)),
+                        max_new_tokens=int(news[i]))
+                for i in range(n)]
+        return [reqs[i] for i in order]       # shuffled arrival order
+
+    ep = PagedServeEngine(m, params, num_blocks=12, block_size=4,
+                          max_batch=3, max_seq_len=48,
+                          prefill_buckets=(8, 16))
+    done_p = ep.run(mk(), max_ticks=600)
+    ec = ServeEngine(m, params, slots=3, cache_len=48,
+                     prefill_buckets=(8, 16))
+    done_c = ec.run(mk(), max_ticks=600)
+    assert len(done_p) == len(done_c) == n
+    assert _by_uid(done_p) == _by_uid(done_c)
+    s = ep.metrics.summary()
+    emitted = sum(len(r.out_tokens) for r in done_p)
+    assert s["counters"]["tokens_out"] == emitted
+    # every emitted token is either a decode-step token or the token
+    # sampled when a prefill completes; preempt-by-recompute adds at
+    # most one extra prefill completion per preemption event
+    first_toks = sum(1 for r in done_p if r.out_tokens)
+    prefill_finishes = emitted - s["counters"]["decode_tokens"]
+    assert first_toks <= prefill_finishes \
+        <= first_toks + s["counters"]["preempted"]
+    ep.pool.check()
+    assert ep.pool.occupancy() == 0.0
