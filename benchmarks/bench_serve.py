@@ -17,6 +17,7 @@ decode logits are finite).
 """
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -143,8 +144,96 @@ def bench_paged_kernel(model, params, cfg, *, requests=4, max_new=6,
     return rows
 
 
+_SHARDED_PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.serve import PagedServeEngine, Request
+from repro.launch.mesh import make_mesh
+
+cfg = get_reduced("opt_6_7b").replace(remat=False, dtype="float32",
+                                      n_heads=8, n_kv_heads=4, head_dim=16)
+model = Model(cfg)
+params = jax.tree_util.tree_map(
+    lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+    model.init(jax.random.PRNGKey(0)))
+
+def requests(n, max_new):
+    rng = np.random.default_rng(2)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               (int(rng.integers(4, 20)),)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+N, MAX_NEW = %(requests)d, %(max_new)d
+rows, toks = [], {}
+for label, mesh in (("single", None),
+                    ("sharded", make_mesh((2, 4), ("data", "model")))):
+    eng = PagedServeEngine(model, params, num_blocks=32, block_size=8,
+                           max_batch=4, max_seq_len=128,
+                           prefill_buckets=(16, 32), paged_kernel="fused",
+                           mesh=mesh)
+    t0 = time.time()
+    done = eng.run(requests(N, MAX_NEW), max_ticks=400)
+    dt = time.time() - t0
+    eng.pool.check()
+    toks[label] = {r.uid: r.out_tokens for r in done}
+    s = eng.metrics.summary()
+    stack = eng.cache.get("layers") or eng.cache.get("prefix") \
+        or eng.cache["scan"]
+    rows.append({
+        "engine": label, "decode_path": eng.decode_path,
+        "requests_done": len(done),
+        "tokens": s["counters"]["tokens_out"],
+        "tok_per_s": s["counters"]["tokens_out"] / dt if dt > 0 else 0.0,
+        "per_token_ms_p50": s["per_token_s"]["p50"] * 1e3,
+        "occupancy_peak": s["occupancy"]["peak"],
+        "kv_pool_spec": str(getattr(stack[0]["self"]["k"].sharding,
+                                    "spec", "single-device")),
+    })
+print(json.dumps({"rows": rows,
+                  "equal": toks["single"] == toks["sharded"]}))
+"""
+
+
+def bench_sharded(*, requests=4, max_new=6):
+    """Sharded (2x4 TP/DP mesh, 8 fake CPU devices) vs single-device
+    paged serving: token-for-token equality plus throughput/latency of
+    both, in a subprocess (the fake device count must be pinned before
+    jax initializes, so this cannot run in-process).
+
+    CPU wall-times favor the single-device engine (8-way fake-device
+    SPMD on one host is pure overhead); the section pins the mesh
+    engine's CORRECTNESS and reports the KV-pool placement the TP win
+    comes from on real hardware."""
+    import subprocess
+    import sys
+    prog = _SHARDED_PROG % {"requests": requests, "max_new": max_new}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in (env.get("PYTHONPATH"), "src") if p])
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=570, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for row in out["rows"]:
+        print(f"serve,sharded={row['engine']},path={row['decode_path']},"
+              f"tok_s={row['tok_per_s']:.1f},"
+              f"per_token_ms_p50={row['per_token_ms_p50']:.1f},"
+              f"kv_pool_spec={row['kv_pool_spec']}")
+    assert out["equal"], "sharded decode diverged from single-device"
+    sharded = next(r for r in out["rows"] if r["engine"] == "sharded")
+    assert "model" in sharded["kv_pool_spec"], sharded
+    print("serve,sharded_equal=1")
+    return out["rows"]
+
+
 def run(json_path: str = "", requests: int = 6, max_new: int = 8,
-        bits: int = 3):
+        bits: int = 3, sharded: bool = False):
     common.header("Paged serving bench (CPU smoke): dense vs BCQ backends")
     cfg = get_reduced("opt_6_7b").replace(max_seq_len=256, remat=False)
     model = Model(cfg)
@@ -162,9 +251,15 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
     kernel_rows = bench_paged_kernel(model, params, cfg,
                                      requests=min(requests, 4),
                                      max_new=max_new)
+    sharded_rows = []
+    if sharded:
+        common.header("Sharded (2x4 mesh, 8 fake devices) vs single device")
+        sharded_rows = bench_sharded(requests=min(requests, 4),
+                                     max_new=max_new)
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"rows": rows, "paged_kernel_rows": kernel_rows},
+            json.dump({"rows": rows, "paged_kernel_rows": kernel_rows,
+                       "sharded_rows": sharded_rows},
                       f, indent=2, sort_keys=True)
         print(f"serve,metrics_json={json_path}")
     return rows
@@ -176,9 +271,12 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the sharded-vs-single section (spawns an "
+                         "8-fake-device subprocess; ~1 min extra)")
     args = ap.parse_args()
     run(json_path=args.json, requests=args.requests, max_new=args.max_new,
-        bits=args.bits)
+        bits=args.bits, sharded=args.sharded)
 
 
 if __name__ == "__main__":

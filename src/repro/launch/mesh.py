@@ -1,21 +1,40 @@
 """Production mesh construction.
 
-A FUNCTION (never a module-level constant) so importing this module never
+FUNCTIONS (never module-level constants) so importing this module never
 touches jax device state — required because the dry-run pins the device
 count via XLA_FLAGS before any jax initialization.
+
+``make_mesh`` is the single construction point: it papers over the
+``axis_types`` API (``jax.sharding.AxisType`` only exists on newer jax
+releases; on older ones every axis is implicitly Auto, which is the
+type we request anyway), so meshes build identically across the jax
+versions this repo runs on.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh(shape, axes):
+    """Mesh with Auto axis types on every jax version.
+
+    Newer jax wants ``axis_types`` spelled explicitly (and sharding-in-
+    types meshes default differently); jax <= 0.4.x has no ``AxisType``
+    at all and every axis is Auto.  Request Auto where the API exists,
+    fall back silently where it doesn't.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (single pod, 256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 0):
@@ -29,6 +48,37 @@ def make_mesh_for(n_devices: int, model_parallel: int = 0):
     while n_devices % model_parallel:
         model_parallel //= 2
     data = n_devices // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))
+
+
+def parse_mesh(spec: str, tp: int = 0):
+    """Build a serving mesh from a CLI flag.
+
+    ``spec`` is either ``"auto"`` (largest ``(data, model)`` divisor mesh
+    over whatever devices exist, with ``tp`` pinning the model axis) or
+    an explicit ``"DxM"`` shape like ``"2x4"`` (data x model; must
+    multiply to the visible device count).
+    """
+    if spec == "auto":
+        n = len(jax.devices())
+        if tp and n % tp:
+            # make_mesh_for would silently halve tp down to a divisor —
+            # an explicit request for a model-parallel extent must not
+            # degrade to less (or no) TP without the operator noticing
+            raise ValueError(f"--tp {tp} does not divide the {n} visible "
+                             f"devices")
+        return make_mesh_for(n, tp)
+    try:
+        data, model = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh expects 'auto' or 'DxM' (e.g. 2x4), "
+                         f"got {spec!r}")
+    if tp and tp != model:
+        raise ValueError(f"--tp {tp} contradicts --mesh {spec} "
+                         f"(model axis {model})")
+    n = len(jax.devices())
+    if data * model != n:
+        raise ValueError(f"--mesh {spec} needs {data * model} devices, "
+                         f"found {n} (hint: "
+                         f"--xla_force_host_platform_device_count)")
+    return make_mesh((data, model), ("data", "model"))

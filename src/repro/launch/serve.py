@@ -27,6 +27,14 @@ sliding-window models, which the paged cache does not cover).
 (fused Pallas kernel where hardware-native), ``fused`` (force the
 kernel, interpret mode off-TPU) or ``gather`` (the paged_view
 fallback); unsupported variants (int8-KV, MLA) always gather.
+
+``--mesh auto`` (or an explicit ``DxM`` shape like ``2x4``) serves the
+paged engine sharded over a ``("data", "model")`` mesh: KV pool leaves
+shard over kv_heads (head_dim fallback for narrow-GQA), params ride
+``parallel.sharding.build_shardings`` (BCQ bundles included), and the
+fused kernel launches per model-shard via ``shard_map``.  ``--tp N``
+pins the model axis under ``--mesh auto``.  Smoke it on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 import argparse
 import time
@@ -127,6 +135,13 @@ def main():
                          "off-TPU) vs the gathered paged_view fallback; "
                          "unsupported variants (int8-KV, MLA) always "
                          "fall back to gather")
+    ap.add_argument("--mesh", default="",
+                    help="[paged engine] serve sharded over a (data, "
+                         "model) mesh: 'auto' (largest divisor mesh over "
+                         "the visible devices; --tp pins the model axis) "
+                         "or an explicit DxM shape like 2x4")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="model-parallel extent for --mesh auto")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated")
     ap.add_argument("--metrics-json", default="",
@@ -239,6 +254,23 @@ def main():
     if engine == "auto":
         engine = "paged" if supports_paging(cfg) else "slots"
         print(f"[launch.serve] engine=auto -> {engine}")
+    mesh = None
+    if args.mesh:
+        if engine != "paged":
+            raise SystemExit("--mesh requires the paged engine "
+                             "(SSM/hybrid, enc-dec and sliding-window "
+                             "models serve single-device for now)")
+        from repro.launch.mesh import parse_mesh
+        from repro.parallel import sharding as shd
+        try:
+            mesh = parse_mesh(args.mesh, tp=args.tp)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        shd.set_activation_rules(mesh, shd.make_rules())
+        print(f"[launch.serve] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"over {mesh.devices.size} devices")
+    elif args.tp:
+        raise SystemExit("--tp only applies with --mesh auto")
     if engine == "paged":
         eng = PagedServeEngine(model, params, num_blocks=args.num_blocks,
                                block_size=args.block_size,
@@ -246,7 +278,8 @@ def main():
                                max_seq_len=args.max_seq_len or args.cache_len,
                                prefill_buckets=(16, 32, 64),
                                pretune=args.pretune,
-                               paged_kernel=args.paged_kernel)
+                               paged_kernel=args.paged_kernel,
+                               mesh=mesh)
         print(f"[launch.serve] paged-kernel={args.paged_kernel} -> "
               f"decode path: {eng.decode_path}")
     else:

@@ -27,7 +27,6 @@ def main():
                     help="e.g. '4x2' to build a data x model mesh")
     args = ap.parse_args()
 
-    import jax
     from repro.configs import get_config, get_reduced
     from repro.data.pipeline import SyntheticLM
     from repro.models import Model
@@ -41,9 +40,11 @@ def main():
 
     mesh = None
     if args.mesh:
-        d, m = (int(v) for v in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import parse_mesh
+        try:
+            mesh = parse_mesh(args.mesh)
+        except ValueError as e:
+            raise SystemExit(str(e))
         rules = shd.make_rules(fsdp=bool(args.fsdp), act_shard=True)
         shd.set_activation_rules(mesh, rules)
 

@@ -18,6 +18,7 @@ the paper-exact compressed cache; decode uses the absorbed formulation
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Callable, Optional
 
@@ -545,6 +546,42 @@ def decode_attend(q, cache, positions, *, window=0, scale=None):
 PAGED_KERNEL_MODES = ("auto", "fused", "gather")
 
 
+# --- sharded paged decode --------------------------------------------------
+#
+# When the paged serve engine runs over a TP/DP mesh, the KV pool leaves
+# are sharded over "kv_heads" -> model and the fused kernel must launch
+# per model-shard (a Pallas call has no GSPMD partitioning rule, so under
+# plain jit XLA would all-gather the pool).  The engine declares the mesh
+# through ``paged_shard_scope`` around its (trace-triggering) decode
+# calls, and ``paged_decode_attend`` routes the kernel through
+# ``shard_map`` over the mesh: each shard reads its own kv-head slice of
+# every pool block, block tables/positions ride along replicated (or
+# data-sharded with the batch rows), and no cross-device traffic happens
+# inside the step at all — heads are embarrassingly parallel in decode
+# attention.  The per-shard head counts feed ``tune.dispatch`` for the
+# capability probe and ``block_h`` clamping, so head counts that do not
+# divide the mesh fall back to the gathered ``paged_view`` path exactly
+# like the other unsupported variants.
+
+_PAGED_SHARD = {"mesh": None, "tp": 1, "shard_batch": False}
+
+
+@contextlib.contextmanager
+def paged_shard_scope(mesh, *, tp: int = 1, shard_batch: bool = False):
+    """Declare the serving mesh for paged decode tracing.
+
+    Active while the engine's jitted ``decode_step`` traces (tracing
+    happens inside the first call, so the engine wraps every call);
+    restores the previous scope on exit so engines with different
+    meshes (or none) can coexist in one process."""
+    prev = dict(_PAGED_SHARD)
+    _PAGED_SHARD.update(mesh=mesh, tp=tp, shard_batch=shard_batch)
+    try:
+        yield
+    finally:
+        _PAGED_SHARD.update(prev)
+
+
 def _fused_selected(mode: str, supported: bool) -> bool:
     """The single fused-vs-gather routing rule, shared by the device
     path (:func:`paged_decode_attend`) and the host mirror
@@ -560,11 +597,13 @@ def _fused_selected(mode: str, supported: bool) -> bool:
     return mode == "fused" or jax.default_backend() == "tpu"
 
 
-def fused_paged_supported(cache: dict, n_heads: int, *, window: int = 0) -> bool:
+def fused_paged_supported(cache: dict, n_heads: int, *, window: int = 0,
+                          tp: int = 1) -> bool:
     """Can the fused Pallas kernel serve a decode step on this paged
     cache leaf?  MLA latent caches (no ``k``/``v`` leaves), int8-KV
-    pools and sliding-window masking fall back to the gathered path —
-    the capability boundary lives in ``tune.dispatch.kernel_supports``.
+    pools, sliding-window masking and head counts that don't divide a
+    ``tp``-way model mesh fall back to the gathered path — the
+    capability boundary lives in ``tune.dispatch.kernel_supports``.
     """
     from repro.tune.dispatch import kernel_supports
     if not is_paged(cache) or "k" not in cache:
@@ -574,22 +613,25 @@ def fused_paged_supported(cache: dict, n_heads: int, *, window: int = 0) -> bool
     return kernel_supports(
         "paged_attention", m=n_heads, n=pages * bs, group_size=bs,
         n_kv_heads=cache["k"].shape[2], kv_dtype=cache["k"].dtype,
-        window=window)
+        window=window, tp=tp)
 
 
-def paged_kernel_mode(cfg, *, block_size: int, pages: int) -> str:
+def paged_kernel_mode(cfg, *, block_size: int, pages: int,
+                      tp: int = 1) -> str:
     """Host-side mirror of the decode routing decision: resolve
     ``cfg.paged_kernel`` to the path ("fused" | "gather") a decode step
     on this config's paged cache will actually take.  Used by the serve
     engine for labeling and KV-bandwidth accounting — the device-side
-    decision in :func:`paged_decode_attend` follows the same rule."""
+    decision in :func:`paged_decode_attend` follows the same rule.
+    ``tp`` is the model-axis extent when serving over a mesh (the fused
+    kernel then launches per-shard via ``shard_map``)."""
     from repro.tune.dispatch import kernel_supports
     ok = kernel_supports(
         "paged_attention", m=cfg.n_heads, n=pages * block_size,
         group_size=block_size,
         n_kv_heads=cfg.n_kv_heads * cfg.kv_replication,
         kv_dtype="int8" if cfg.kv_cache_bits == 8 else cfg.dtype,
-        window=cfg.sliding_window, latent=cfg.attention == "mla")
+        window=cfg.sliding_window, latent=cfg.attention == "mla", tp=tp)
     return "fused" if _fused_selected(cfg.paged_kernel, ok) else "gather"
 
 
@@ -607,13 +649,39 @@ def paged_decode_attend(q, cache, positions, *, window=0, scale=None,
     mode: "auto" (fused only where it is the hardware-native path, i.e.
     on TPU), "fused" (force the kernel; interpret mode off-TPU), or
     "gather".  Variants the kernel does not cover (int8-KV, MLA,
-    sliding-window) fall back to the gathered path in every mode.
+    sliding-window, mesh-indivisible head counts) fall back to the
+    gathered path in every mode.
+
+    Inside a :func:`paged_shard_scope` the kernel launches per
+    model-shard through ``shard_map``: the pool's kv-head slice stays
+    local to each shard and the capability probe / ``block_h`` clamp see
+    the per-shard head counts.
     """
+    mesh = _PAGED_SHARD["mesh"]
+    tp = _PAGED_SHARD["tp"] if mesh is not None else 1
     use = _fused_selected(mode, fused_paged_supported(cache, q.shape[2],
-                                                      window=window))
+                                                      window=window, tp=tp))
     if use:
         from repro.core.lut_gemm import INTERPRET
         from repro.kernels.paged_attention import paged_attention
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from repro.parallel.sharding import shard_map_compat
+            dax = "data" if _PAGED_SHARD["shard_batch"] else None
+            fn = functools.partial(paged_attention, scale=scale,
+                                   interpret=INTERPRET)
+            out3 = shard_map_compat(
+                fn, mesh,
+                in_specs=(P(dax, "model", None),        # q [B, H, D]
+                          P(None, None, "model", None),  # k pool
+                          P(None, None, "model", None),  # v pool
+                          P(None, None),                 # pos pool
+                          P(dax, None),                  # block tables
+                          P(dax)),                       # positions
+                out_specs=P(dax, "model", None))(
+                q[:, 0], cache["k"], cache["v"], cache["pos"],
+                cache["block_tables"], positions[:, 0])
+            return out3[:, None]
         out = paged_attention(
             q[:, 0], cache["k"], cache["v"], cache["pos"],
             cache["block_tables"], positions[:, 0], scale=scale,

@@ -26,7 +26,7 @@ from repro.models import transformer as tfm
 from repro.models.layers import (embed_desc, embed_apply, norm_desc,
                                  norm_apply, unembed_apply)
 from repro.models.module import (ParamDesc, abstract_params, init_params,
-                                 logical_axes, param_count,
+                                 is_desc, logical_axes, param_count,
                                  tree_map_with_path)
 
 
@@ -132,6 +132,34 @@ class Model:
         cache = init_params(jax.random.PRNGKey(0), self.paged_cache_desc(
             batch, num_blocks, block_size, max_blocks_per_seq))
         return self._blank_pos(cache)
+
+    def paged_cache_axes(self, batch: int, num_blocks: int, block_size: int,
+                         max_blocks_per_seq: int):
+        """Logical-axes tree for SHARDING a paged cache.
+
+        The pool descriptors are the contiguous ones with batch ->
+        num_blocks, so their leading axis is labelled "batch" — but the
+        pool dim must never shard over the data axis (every sequence's
+        block table can point anywhere in the pool), and neither may the
+        within-block sequence dim that MLA labels "kv_seq" (a block is
+        the DMA unit of the fused kernel).  Head axes survive, so
+        ``build_shardings`` puts the pool's kv_heads (or, via its
+        divisibility fallback, head_dim) on the model axis exactly like
+        the contiguous cache.  Block tables are replicated host state.
+        """
+        def fix(path, d):
+            if not is_desc(d):
+                return d
+            axes = d.axes or (None,) * len(d.shape)
+            if path and path[-1] == "block_tables":
+                axes = (None,) * len(d.shape)
+            else:
+                axes = tuple(None if a in ("batch", "kv_seq") else a
+                             for a in axes)
+            return dataclasses.replace(d, axes=axes)
+        desc = tree_map_with_path(fix, self.paged_cache_desc(
+            batch, num_blocks, block_size, max_blocks_per_seq))
+        return logical_axes(desc)
 
     @staticmethod
     def _blank_pos(cache):

@@ -124,6 +124,8 @@ class Roofline:
 def from_compiled(compiled) -> Roofline:
     """Roofline terms straight from one compiled executable."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older jax: one dict per device
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     coll = collective_bytes(text)

