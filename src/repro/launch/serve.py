@@ -28,6 +28,11 @@ sliding-window models, which the paged cache does not cover).
 kernel, interpret mode off-TPU) or ``gather`` (the paged_view
 fallback); unsupported variants (int8-KV, MLA) always gather.
 
+``--prefix-cache on|off`` (default: on for the paged engine) shares KV
+blocks across requests with a common block-aligned prompt prefix —
+refcounted adoption at admission, copy-on-write by recompute on the
+first divergent or partially-filled block (see ``docs/serving.md``).
+
 ``--mesh auto`` (or an explicit ``DxM`` shape like ``2x4``) serves the
 paged engine sharded over a ``("data", "model")`` mesh: KV pool leaves
 shard over kv_heads (head_dim fallback for narrow-GQA), params ride
@@ -135,6 +140,13 @@ def main():
                          "off-TPU) vs the gathered paged_view fallback; "
                          "unsupported variants (int8-KV, MLA) always "
                          "fall back to gather")
+    ap.add_argument("--prefix-cache", default=None,
+                    choices=["on", "off"],
+                    help="[paged engine] share KV blocks across requests "
+                         "with a common block-aligned prompt prefix "
+                         "(refcounted, copy-on-write by recompute; see "
+                         "docs/serving.md).  Default: on for the paged "
+                         "engine")
     ap.add_argument("--mesh", default="",
                     help="[paged engine] serve sharded over a (data, "
                          "model) mesh: 'auto' (largest divisor mesh over "
@@ -271,6 +283,9 @@ def main():
               f"over {mesh.devices.size} devices")
     elif args.tp:
         raise SystemExit("--tp only applies with --mesh auto")
+    if args.prefix_cache is not None and engine != "paged":
+        raise SystemExit("--prefix-cache requires the paged engine "
+                         "(the slots engine has no shared KV pool)")
     if engine == "paged":
         eng = PagedServeEngine(model, params, num_blocks=args.num_blocks,
                                block_size=args.block_size,
@@ -279,6 +294,7 @@ def main():
                                prefill_buckets=(16, 32, 64),
                                pretune=args.pretune,
                                paged_kernel=args.paged_kernel,
+                               prefix_cache=args.prefix_cache != "off",
                                mesh=mesh)
         print(f"[launch.serve] paged-kernel={args.paged_kernel} -> "
               f"decode path: {eng.decode_path}")
@@ -310,6 +326,13 @@ def main():
         print(f"[launch.serve] decode path={pk['path']}  KV bytes/token: "
               f"fused={pk['kv_bytes_per_token_fused']:.0f} "
               f"gathered={pk['kv_bytes_per_token_gathered']:.0f}")
+        if eng.prefix is not None:
+            pc = s["prefix_cache"]
+            print(f"[launch.serve] prefix cache: hit-rate "
+                  f"{pc['hit_rate']:.2f}  blocks saved "
+                  f"{pc['blocks_saved']}  tokens saved "
+                  f"{pc['tokens_saved']}  effective capacity "
+                  f"peak {s['effective_capacity']['peak']:.2f}x")
         if args.metrics_json:
             eng.metrics.to_json(args.metrics_json)
             print(f"[launch.serve] metrics -> {args.metrics_json}")

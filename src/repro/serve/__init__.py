@@ -1,5 +1,6 @@
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
                                 supports_paging)
 from repro.serve.metrics import Histogram, ServeMetrics
-from repro.serve.paging import BlockPool, blocks_for, set_block_tables
+from repro.serve.paging import (BlockPool, PrefixCache, blocks_for,
+                                set_block_tables)
 from repro.serve.scheduler import Scheduler, SeqState, TickPlan

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.models import Model
 from repro.serve.metrics import ServeMetrics
-from repro.serve.paging import BlockPool, set_block_tables
+from repro.serve.paging import BlockPool, PrefixCache, set_block_tables
 from repro.serve.scheduler import Scheduler
 
 
@@ -108,6 +108,16 @@ class PagedServeEngine:
     both paths' analytic KV traffic is tracked per decode step in
     ``metrics`` (``kv_bytes_per_token_{fused,gathered}``).
 
+    ``prefix_cache=True`` turns on prefix caching: fully-written prompt
+    blocks are indexed by their token content and later requests with
+    the same block-aligned prefix ADOPT those live blocks by reference
+    instead of re-prefilling them (see ``docs/serving.md``).  Adopted
+    blocks are shared and immutable — writes always land in privately
+    owned blocks (copy-on-write by recompute) — so greedy outputs are
+    token-for-token identical with the cache on or off.  Off by
+    default: a warm cache deliberately keeps pool blocks occupied after
+    their sequences retire, which changes drain-time occupancy.
+
     ``mesh`` (a ``("data", "model")`` jax Mesh, see
     ``launch.mesh.make_mesh_for``) serves the same engine TP/DP-sharded:
     params and KV-pool leaves are ``device_put`` through
@@ -126,6 +136,7 @@ class PagedServeEngine:
                  max_seq_len: int = 0, prefill_buckets=(32, 128, 512),
                  rng_seed: int = 0, pretune: bool = False,
                  paged_kernel: Optional[str] = None,
+                 prefix_cache: bool = False,
                  mesh=None, shard_rules: Optional[dict] = None,
                  clock=time.perf_counter):
         from repro.models.attention import kv_entry_bytes, paged_kernel_mode
@@ -160,10 +171,12 @@ class PagedServeEngine:
                                             block_size,
                                             self.max_blocks_per_seq)
         self.pool = BlockPool(num_blocks, block_size)
+        self.prefix = PrefixCache(self.pool) if prefix_cache else None
         self.sched = Scheduler(self.pool, rows=max_batch,
                                buckets=self.buckets,
                                max_blocks_per_seq=self.max_blocks_per_seq,
-                               max_seq_len=max_seq_len)
+                               max_seq_len=max_seq_len,
+                               prefix_cache=self.prefix)
         self.metrics = ServeMetrics(clock)
         self.tables = np.full((max_batch, self.max_blocks_per_seq), -1,
                               np.int32)
@@ -275,11 +288,31 @@ class PagedServeEngine:
             self.finished.append(req)
         for seq in plan.admitted:
             self.metrics.on_admit(seq.req.uid)
+            if self.prefix is not None:
+                self.metrics.on_prefix_lookup(
+                    seq.req.uid, seq.prefix_queried, seq.prefix_hit,
+                    seq.shared_tokens, seq.cow_tokens)
         for seq in plan.preempted:
             self.metrics.on_preempt(seq.req.uid)
         for seq in plan.failed:          # pool too dry even after preemption
             self._retire(seq)
         self._sync_tables()
+
+        if self.prefix is not None:
+            # immutability contract: every block this tick writes must be
+            # privately owned by the writing sequence (shared prefix
+            # blocks are read-only; CoW means they were never adopted)
+            for seq in plan.decode:
+                blk = seq.table[seq.kv_len // self.block_size]
+                assert self.pool.writable(blk, seq.uid), \
+                    f"decode would write shared block {blk}"
+            if plan.prefill is not None:
+                pf = plan.prefill
+                lo = pf.start // self.block_size
+                hi = (pf.start + pf.length - 1) // self.block_size
+                for blk in pf.seq.table[lo:hi + 1]:
+                    assert self.pool.writable(blk, pf.seq.uid), \
+                        f"prefill would write shared block {blk}"
 
         if plan.decode:
             tables = self.tables.copy()
@@ -329,7 +362,16 @@ class PagedServeEngine:
                 self._emit_token(seq, tok)
 
         self.ticks += 1
-        self.metrics.on_tick(self.pool.occupancy(), self.sched.active)
+        if self.prefix is not None:
+            self.metrics.on_tick(
+                self.pool.occupancy(), self.sched.active,
+                logical_blocks=sum(len(s.table)
+                                   for s in self.sched.running),
+                physical_blocks=self.pool.used_blocks,
+                prefix_cached=len(self.prefix),
+                prefix_evictions=self.prefix.evictions)
+        else:
+            self.metrics.on_tick(self.pool.occupancy(), self.sched.active)
 
     # ------------------------------------------------------------------
     def run(self, requests: list, max_ticks: int = 1000) -> list:

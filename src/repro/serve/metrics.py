@@ -3,9 +3,12 @@
 No dependencies beyond numpy.  The engine feeds events through the
 ``on_*`` hooks with timestamps from an injectable clock (tests pass a
 fake clock for determinism); ``summary()`` renders the numbers the
-acceptance criteria ask for — TTFT, per-token latency, throughput and
-pool occupancy — and ``to_json`` persists them (uploaded as a CI
-artifact by ``benchmarks/bench_serve.py``).
+acceptance criteria ask for — TTFT, per-token latency, throughput, pool
+occupancy and prefix-cache effectiveness — and ``to_json`` persists
+them (uploaded as a CI artifact by ``benchmarks/bench_serve.py``).
+
+Every key ``summary()`` emits is documented in the README metrics
+glossary ("Serving metrics glossary"); keep the two in sync.
 """
 from __future__ import annotations
 
@@ -68,10 +71,16 @@ class ServeMetrics:
                          "failed": 0, "preempted": 0, "rejected": 0,
                          "tokens_out": 0, "prefill_chunks": 0, "ticks": 0,
                          "decode_steps": 0, "decode_tokens": 0,
-                         "kv_bytes_fused_est": 0, "kv_bytes_gathered_est": 0}
+                         "kv_bytes_fused_est": 0, "kv_bytes_gathered_est": 0,
+                         "prefix_lookups": 0, "prefix_hit_requests": 0,
+                         "prefix_queried_blocks": 0, "prefix_hit_blocks": 0,
+                         "prefix_tokens_saved": 0, "prefix_cow_events": 0,
+                         "prefix_cow_tokens": 0, "prefix_evictions": 0}
         self.decode_path: Optional[str] = None   # "fused" | "gather"
         self.occupancy: List[float] = []       # one sample per tick
         self.active: List[int] = []            # concurrent running seqs
+        self.sharing: List[float] = []         # logical/physical blocks
+        self.prefix_cached: List[int] = []     # cache-held blocks per tick
         self._t_submit: Dict[int, float] = {}
         self._t_last_tok: Dict[int, float] = {}
         self._t0 = clock()
@@ -106,10 +115,43 @@ class ServeMetrics:
         """Retired with an error (e.g. pool OOM truncation)."""
         self.counters["failed"] += 1
 
-    def on_tick(self, occupancy: float, active: int) -> None:
+    def on_prefix_lookup(self, uid: int, queried_blocks: int,
+                         hit_blocks: int, tokens_saved: int,
+                         cow_tokens: int) -> None:
+        """One admission-time prefix-index probe.  ``queried_blocks`` is
+        how many full prompt blocks were eligible for adoption,
+        ``hit_blocks`` how many were found live (== pool blocks saved),
+        ``tokens_saved`` the prefill tokens skipped, and ``cow_tokens``
+        the cached tokens that had to be RECOMPUTED into a private block
+        because they sat in a partially-matching tail block
+        (copy-on-write by recompute)."""
+        self.counters["prefix_lookups"] += 1
+        self.counters["prefix_queried_blocks"] += int(queried_blocks)
+        self.counters["prefix_hit_blocks"] += int(hit_blocks)
+        self.counters["prefix_tokens_saved"] += int(tokens_saved)
+        if hit_blocks > 0:
+            self.counters["prefix_hit_requests"] += 1
+        if cow_tokens > 0:
+            self.counters["prefix_cow_events"] += 1
+            self.counters["prefix_cow_tokens"] += int(cow_tokens)
+
+    def on_tick(self, occupancy: float, active: int,
+                logical_blocks: Optional[int] = None,
+                physical_blocks: Optional[int] = None,
+                prefix_cached: Optional[int] = None,
+                prefix_evictions: Optional[int] = None) -> None:
         self.counters["ticks"] += 1
         self.occupancy.append(float(occupancy))
         self.active.append(int(active))
+        if logical_blocks is not None and physical_blocks:
+            # effective-capacity gauge: block-table entries across running
+            # sequences over distinct pool blocks in use.  > 1.0 means
+            # sharing is letting logical context exceed physical KV.
+            self.sharing.append(logical_blocks / physical_blocks)
+        if prefix_cached is not None:
+            self.prefix_cached.append(int(prefix_cached))
+        if prefix_evictions is not None:
+            self.counters["prefix_evictions"] = int(prefix_evictions)
 
     def on_prefill_chunk(self) -> None:
         self.counters["prefill_chunks"] += 1
@@ -135,7 +177,9 @@ class ServeMetrics:
     def summary(self) -> Dict:
         occ = np.asarray(self.occupancy) if self.occupancy else np.zeros(1)
         act = np.asarray(self.active) if self.active else np.zeros(1)
+        shr = np.asarray(self.sharing) if self.sharing else np.ones(1)
         ndec = max(self.counters["decode_tokens"], 1)
+        nq = max(self.counters["prefix_queried_blocks"], 1)
         return {
             "counters": dict(self.counters),
             "ttft_s": self.ttft.summary(),
@@ -150,6 +194,19 @@ class ServeMetrics:
                     self.counters["kv_bytes_fused_est"] / ndec,
                 "kv_bytes_per_token_gathered":
                     self.counters["kv_bytes_gathered_est"] / ndec,
+            },
+            "prefix_cache": {
+                "hit_rate": self.counters["prefix_hit_blocks"] / nq,
+                "blocks_saved": self.counters["prefix_hit_blocks"],
+                "tokens_saved": self.counters["prefix_tokens_saved"],
+                "cow_events": self.counters["prefix_cow_events"],
+                "evictions": self.counters["prefix_evictions"],
+                "cached_blocks_peak":
+                    max(self.prefix_cached) if self.prefix_cached else 0,
+            },
+            "effective_capacity": {     # 1.0 == no sharing (cache off)
+                "mean": float(shr.mean()),
+                "peak": float(shr.max()),
             },
         }
 

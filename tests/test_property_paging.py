@@ -1,13 +1,26 @@
-"""Hypothesis property tests for the paged-KV block allocator and the
-trash-block write routing.
+"""Hypothesis property tests for the paged-KV block allocator, the
+refcounted prefix sharing on top of it, and the trash-block write
+routing.
 
 Invariants (the ones the paged cache's correctness rests on):
 
   * random admit/extend/preempt/free sequences never double-book a
     block, never hand out the reserved trash block 0, and never leak —
     the pool's books balance after every operation and drain to empty;
-  * random scheduler walks keep every running sequence's block table
-    disjoint from every other's and free of block 0;
+  * random share/decref walks keep refcounts consistent: a holder is
+    never added twice, ``free`` is a decref that recycles only at
+    refcount 0, and releasing every holder drains the pool to empty
+    (refcounts can never go negative — the pool asserts on any
+    free-by-non-holder);
+  * random scheduler walks (cache off) keep every running sequence's
+    block table disjoint from every other's and free of block 0; with
+    a prefix cache, tables may overlap but every block a sequence
+    WRITES (decode append, prefill chunk) is privately owned —
+    ``pool.writable(block, uid)`` — so shared blocks are immutable;
+    after drain + ``cache.clear()`` the pool is fully free;
+  * random register/lookup/evict walks on the prefix index only ever
+    serve chains whose tokens verify, and eviction only touches
+    cache-only (refcount-1) blocks;
   * device-side ``_paged_insert`` routes every invalid write (negative
     position, unallocated / out-of-range logical block) to the trash
     block: no write ever aliases a block owned by a live sequence.
@@ -23,7 +36,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.models import attention as attn
-from repro.serve import BlockPool, Request, Scheduler
+from repro.serve import BlockPool, PrefixCache, Request, Scheduler
 
 _SET = dict(max_examples=40, deadline=None,
             suppress_health_check=[HealthCheck.too_slow])
@@ -74,6 +87,133 @@ def test_pool_never_double_books_or_leaks(case):
         pool.free(blks, owner)
     pool.check()
     assert pool.free_blocks == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# BlockPool: refcounted share / decref walks
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def share_ops(draw):
+    num_blocks = draw(st.integers(3, 33))
+    ops = draw(st.lists(
+        st.tuples(st.sampled_from(["alloc", "share", "decref"]),
+                  st.integers(0, 5),        # owner id
+                  st.integers(1, 4)),       # alloc count / op count
+        min_size=1, max_size=50))
+    return num_blocks, ops
+
+
+@given(share_ops())
+@settings(**_SET)
+def test_pool_refcounts_balance_and_drain(case):
+    """Random alloc/share/decref walks: the holder model below mirrors
+    the pool exactly, refcounts match it after every op, a shared block
+    only recycles when its LAST holder releases, and releasing every
+    hold drains the pool to empty."""
+    num_blocks, ops = case
+    pool = BlockPool(num_blocks, block_size=4)
+    held = {}                                 # owner -> [blocks] (holds)
+    for op, owner, n in ops:
+        if op == "alloc":
+            got = pool.alloc(owner, n)
+            if got is None:
+                assert n > pool.free_blocks
+            else:
+                held.setdefault(owner, []).extend(got)
+        elif op == "share":
+            # share a block some OTHER owner holds and this one doesn't
+            mine = set(held.get(owner, []))
+            cands = sorted({b for o, blks in held.items() if o != owner
+                            for b in blks} - mine)
+            if cands:
+                b = cands[n % len(cands)]
+                rc = pool.refcount(b)
+                pool.share([b], owner)
+                held.setdefault(owner, []).append(b)
+                assert pool.refcount(b) == rc + 1
+        elif op == "decref" and held.get(owner):
+            take = held[owner][:n]
+            for b in take:
+                rc = pool.refcount(b)
+                was_free = pool.free_blocks
+                pool.free([b], owner)
+                held[owner].remove(b)
+                assert pool.refcount(b) == rc - 1
+                # recycle exactly at refcount 0, never before
+                assert pool.free_blocks == was_free + (rc == 1)
+        pool.check()
+        # the pool's distinct-block count matches the holder model
+        assert pool.used_blocks == len({b for blks in held.values()
+                                        for b in blks})
+        for o, blks in held.items():
+            for b in blks:
+                rc = sum(bb == b for bl in held.values() for bb in bl)
+                assert pool.refcount(b) == rc
+                # the immutability predicate: sole holder <=> writable
+                assert pool.writable(b, o) == (rc == 1)
+    for owner, blks in list(held.items()):    # drain every hold
+        pool.free(blks, owner)
+    pool.check()
+    assert pool.free_blocks == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: register / lookup / evict walks
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def prefix_cases(draw):
+    num_blocks = draw(st.integers(6, 24))
+    block_size = draw(st.sampled_from([2, 4]))
+    # low-entropy token streams so chains collide on purpose
+    streams = draw(st.lists(
+        st.lists(st.integers(0, 2), min_size=1, max_size=24),
+        min_size=1, max_size=6))
+    evicts = draw(st.lists(st.integers(1, 4), max_size=4))
+    return num_blocks, block_size, streams, evicts
+
+
+@given(prefix_cases())
+@settings(**_SET)
+def test_prefix_cache_serves_only_verified_chains(case):
+    """Register every stream's full blocks (private writer blocks), then:
+    every lookup's adopted chain must token-match the query; eviction
+    frees only cache-only blocks; clear() drains the pool."""
+    num_blocks, bs, streams, evicts = case
+    pool = BlockPool(num_blocks, bs)
+    cache = PrefixCache(pool)
+    for uid, toks in enumerate(streams):
+        key, blocks = None, []
+        for j in range(len(toks) // bs):
+            got = pool.alloc((uid, j), 1)     # writer's private block
+            if got is None:
+                break
+            blocks.append(((uid, j), got[0]))
+            key = cache.register(key, tuple(toks[j * bs:(j + 1) * bs]),
+                                 got[0])
+            assert key is not None            # int tuples don't collide
+        for owner, b in blocks:               # writer retires; cache holds
+            pool.free([b], owner)
+        pool.check()
+    for toks in streams:
+        hits, _ = cache.lookup(toks, len(toks) // bs)
+        # adopted chain must reproduce the query's tokens block-for-block
+        for j, blk in enumerate(hits):
+            e = next(e for e in cache.entries.values() if e.block == blk
+                     and e.depth == j)
+            assert e.tokens == tuple(toks[j * bs:(j + 1) * bs])
+        assert pool.refcount(hits[0]) >= 1 if hits else True
+    for n in evicts:
+        before = len(cache)
+        freed = cache.evict(n)
+        assert freed <= n and len(cache) == before - freed
+        pool.check()
+    cache.clear()
+    pool.check()
+    assert pool.free_blocks == pool.capacity, "cache leaked blocks"
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +273,90 @@ def test_scheduler_tables_stay_disjoint_and_drain(case):
                     sched.finish(seq)
                     seq.req.done = True
     assert not sched.has_work(), "scheduler wedged"
+    pool.check()
+    assert pool.free_blocks == pool.capacity, "blocks leaked at drain"
+
+
+@st.composite
+def prefix_sched_cases(draw):
+    num_blocks = draw(st.integers(6, 24))
+    block_size = draw(st.sampled_from([2, 4]))
+    rows = draw(st.integers(1, 4))
+    # low-entropy prompts drawn from {0, 1} so block-aligned prefixes
+    # collide constantly — the walk exercises sharing, CoW and eviction
+    reqs = draw(st.lists(
+        st.tuples(st.lists(st.integers(0, 1), min_size=1, max_size=24),
+                  st.integers(1, 8)),         # max_new_tokens
+        min_size=1, max_size=8))
+    return num_blocks, block_size, rows, reqs
+
+
+@given(prefix_sched_cases())
+@settings(**_SET)
+def test_scheduler_with_prefix_cache_never_writes_shared_blocks(case):
+    """Random scheduler walks with the prefix cache on: block tables may
+    overlap between sequences (that is the feature), but every block a
+    sequence is about to WRITE — the decode append's target and every
+    block a prefill chunk covers — is held by that sequence alone.
+    Refcounts stay balanced every tick, and after drain +
+    ``cache.clear()`` the pool is fully free."""
+    num_blocks, block_size, rows, reqs = case
+    pool = BlockPool(num_blocks, block_size)
+    cache = PrefixCache(pool)
+    sched = Scheduler(pool, rows=rows, buckets=(8,),
+                      max_blocks_per_seq=max(num_blocks - 1, 1),
+                      prefix_cache=cache)
+    for i, (ptoks, new) in enumerate(reqs):
+        sched.submit(Request(uid=i, prompt=np.asarray(ptoks, np.int32),
+                             max_new_tokens=new))
+    shared_seen = 0
+    for _ in range(400):
+        if not sched.has_work():
+            break
+        plan = sched.plan_tick()
+        for seq in sched.running:
+            assert 0 not in seq.table, "trash block handed to a sequence"
+            assert len(set(seq.table)) == len(seq.table)
+            # adopted blocks sit at the same logical index for every
+            # holder: kv_len never went backwards past a shared block
+            assert seq.kv_len >= seq.shared_tokens \
+                or seq.kv_len == 0                  # preempted, not yet rerun
+        shared_seen += sum(pool.refcount(b) > 2 for s in sched.running
+                           for b in s.table)
+        for seq in plan.decode:
+            blk = seq.table[seq.kv_len // block_size]
+            assert pool.writable(blk, seq.uid), \
+                "decode append targets a shared block"
+        if plan.prefill is not None:
+            seq, c = plan.prefill.seq, plan.prefill
+            lo, hi = c.start // block_size, \
+                (c.start + c.length - 1) // block_size
+            for blk in seq.table[lo:hi + 1]:
+                assert pool.writable(blk, seq.uid), \
+                    "prefill chunk covers a shared block"
+        pool.check()
+        for seq in plan.failed:
+            sched.finish(seq)
+            seq.req.done = True
+        for seq in plan.decode:
+            seq.kv_len += 1
+            seq.req.out_tokens.append(0)
+            if len(seq.req.out_tokens) >= seq.req.max_new_tokens:
+                sched.finish(seq)
+                seq.req.done = True
+        if plan.prefill is not None:
+            seq = plan.prefill.seq
+            seq.kv_len += plan.prefill.length
+            if seq.kv_len >= seq.prefill_target:
+                seq.req.out_tokens.append(0)
+                if len(seq.req.out_tokens) >= seq.req.max_new_tokens:
+                    sched.finish(seq)
+                    seq.req.done = True
+    assert not sched.has_work(), "scheduler wedged"
+    pool.check()
+    # retired sequences released their holds; only the cache remains
+    assert pool.used_blocks == len(cache)
+    cache.clear()
     pool.check()
     assert pool.free_blocks == pool.capacity, "blocks leaked at drain"
 

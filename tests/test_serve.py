@@ -694,3 +694,168 @@ def test_fuzz_paged_matches_contiguous_under_pressure(seed):
         <= first_toks + s["counters"]["preempted"]
     ep.pool.check()
     assert ep.pool.occupancy() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: refcounted block sharing, CoW-by-recompute
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_requests(vocab, *, prefix_len, tails, max_new=4, seed=3):
+    """Requests sharing one random prefix, each with a unique tail."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, (prefix_len,))
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [prefix, rng.integers(0, vocab, (int(t),))]),
+                    max_new_tokens=max_new)
+            for i, t in enumerate(tails)]
+
+
+def test_prefix_cache_on_off_token_equivalence():
+    """Acceptance: a shared-prefix stream generates token-for-token
+    identical outputs with the prefix cache on and off, while the on-run
+    actually shares (hits > 0, fewer prefill chunks)."""
+    m, params = _model()
+    kw = dict(num_blocks=32, block_size=4, max_batch=3, max_seq_len=64,
+              prefill_buckets=(8, 16))
+    mk = lambda: _shared_prefix_requests(m.cfg.vocab_size, prefix_len=12,
+                                         tails=[3, 5, 2, 7, 4])
+    off = PagedServeEngine(m, params, **kw)
+    done_off = off.run(mk(), max_ticks=400)
+    on = PagedServeEngine(m, params, prefix_cache=True, **kw)
+    done_on = on.run(mk(), max_ticks=400)
+    assert _by_uid(done_on) == _by_uid(done_off)
+    s = on.metrics.summary()
+    assert s["prefix_cache"]["blocks_saved"] > 0
+    assert s["prefix_cache"]["hit_rate"] > 0
+    assert on.metrics.counters["prefill_chunks"] \
+        < off.metrics.counters["prefill_chunks"]
+    # the off-engine emits a neutral prefix section (glossary contract)
+    assert off.metrics.summary()["prefix_cache"]["blocks_saved"] == 0
+    assert off.metrics.summary()["effective_capacity"]["peak"] == 1.0
+    on.pool.check()
+    # drain: sequences released everything; only the cache still holds
+    assert on.pool.used_blocks == len(on.prefix)
+    on.prefix.clear()
+    assert on.pool.free_blocks == on.pool.capacity
+
+
+def test_prefix_cache_warm_probe_skips_prefill():
+    """A repeat of an identical prompt adopts every full block short of
+    the prefill target: exactly one prefill chunk, tokens_saved ==
+    block-aligned cap, and TTFT reflects the skip (fewer ticks to the
+    first token)."""
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=4,
+                           max_batch=2, max_seq_len=64,
+                           prefill_buckets=(8,), prefix_cache=True,
+                           clock=_FakeClock())
+    prompt = np.random.default_rng(5).integers(0, m.cfg.vocab_size, (16,))
+    cold = Request(uid=0, prompt=prompt, max_new_tokens=3)
+    eng.run([cold], max_ticks=100)
+    chunks_cold = eng.metrics.counters["prefill_chunks"]
+    assert chunks_cold == 2                       # 16 tokens / 8-bucket
+
+    warm = Request(uid=1, prompt=prompt, max_new_tokens=3)
+    eng.run([warm], max_ticks=100)
+    assert warm.out_tokens == cold.out_tokens     # greedy, same prompt
+    assert eng.metrics.counters["prefill_chunks"] == chunks_cold + 1
+    # cap = (16-1)//4 = 3 full blocks -> 12 of 16 prompt tokens adopted
+    assert eng.metrics.counters["prefix_tokens_saved"] == 12
+    assert eng.metrics.counters["prefix_hit_requests"] == 1
+    eng.pool.check()
+
+
+def test_admission_budget_counts_only_new_blocks():
+    """Regression (the budget bug this PR fixes): a request whose prompt
+    is almost fully cache-resident must admit even when the free-block
+    count alone could not cover its naive footprint — hit blocks are
+    adopted, not allocated, so only NEW blocks count."""
+    from repro.serve import PrefixCache
+    pool = BlockPool(num_blocks=9, block_size=4)      # 8 usable
+    cache = PrefixCache(pool)
+    sched = Scheduler(pool, rows=2, buckets=(8,), max_blocks_per_seq=8,
+                      prefix_cache=cache)
+    prompt = np.arange(16, dtype=np.int32) % 3
+    # A prefills 16 tokens and keeps decoding: its 4 prompt blocks are
+    # registered and stay PINNED (refcount 2: A + cache), so eviction
+    # cannot rescue a naive budget check
+    a = Request(uid=0, prompt=prompt, max_new_tokens=16)
+    sched.submit(a)
+    for _ in range(6):
+        plan = sched.plan_tick()
+        if plan.prefill is not None:
+            plan.prefill.seq.kv_len += plan.prefill.length
+        for seq in plan.decode:
+            seq.kv_len += 1
+            seq.req.out_tokens.append(0)
+    assert sched.running and sched.running[0].kv_len > 16
+    # A holds 5 blocks (4 prompt + 1 decode): free = 3, evictable = 0,
+    # naive need for B = blocks_for(16) + reserve = 5 > 3
+    assert pool.free_blocks == 3
+    assert cache.evictable() == 0
+    b = Request(uid=1, prompt=prompt.copy(), max_new_tokens=2)
+    sched.submit(b)
+    plan = sched.plan_tick()
+    admitted = {s.uid for s in plan.admitted}
+    assert 1 in admitted, "cache-resident request was starved"
+    bseq = next(s for s in sched.running if s.uid == 1)
+    assert bseq.prefix_hit == 3 and bseq.shared_tokens == 12
+    # adopted blocks are now held by A, B and the cache
+    assert all(pool.refcount(blk) == 3 for blk in bseq.table[:3])
+    for seq in list(sched.running):
+        sched.finish(seq)
+    cache.clear()
+    pool.check()
+    assert pool.free_blocks == pool.capacity
+
+
+def test_prefix_cache_cow_divergent_tail_recomputed():
+    """Two prompts that diverge INSIDE a block: the divergent request
+    must not adopt the partially-matching block (CoW-by-recompute), the
+    overlap is reported as cow tokens, and outputs match the cache-off
+    run."""
+    m, params = _model()
+    rng = np.random.default_rng(9)
+    base = rng.integers(0, m.cfg.vocab_size, (13,))
+    var = base.copy()
+    var[9] = (var[9] + 1) % m.cfg.vocab_size      # diverge inside block 2
+    kw = dict(num_blocks=16, block_size=4, max_batch=1, max_seq_len=64,
+              prefill_buckets=(8,))
+    mk = lambda: [Request(uid=0, prompt=base, max_new_tokens=3),
+                  Request(uid=1, prompt=var, max_new_tokens=3)]
+    off = PagedServeEngine(m, params, **kw)
+    done_off = off.run(mk(), max_ticks=200)
+    on = PagedServeEngine(m, params, prefix_cache=True, **kw)
+    done_on = on.run(mk(), max_ticks=200)
+    assert _by_uid(done_on) == _by_uid(done_off)
+    # uid 1 adopts blocks 0-1 (8 equal tokens) and hits CoW on block 2:
+    # one cached token of overlap (position 8) recomputed, not copied
+    assert on.metrics.counters["prefix_cow_events"] == 1
+    assert on.metrics.counters["prefix_cow_tokens"] == 1
+    assert on.metrics.counters["prefix_hit_blocks"] == 2
+    on.pool.check()
+
+
+@pytest.mark.slow
+def test_prefix_cache_equivalence_under_preemption():
+    """Acceptance: cache-on == cache-off token-for-token even when the
+    pool is small enough to force preempt-by-recompute — victims decref
+    (never hard-free shared blocks) and re-probe the index on
+    re-admission."""
+    m, params = _model()
+    kw = dict(num_blocks=11, block_size=4, max_batch=3, max_seq_len=48,
+              prefill_buckets=(8, 16))
+    mk = lambda: _shared_prefix_requests(m.cfg.vocab_size, prefix_len=9,
+                                         tails=[8, 2, 6, 4], max_new=5,
+                                         seed=11)
+    off = PagedServeEngine(m, params, **kw)
+    done_off = off.run(mk(), max_ticks=600)
+    on = PagedServeEngine(m, params, prefix_cache=True, **kw)
+    done_on = on.run(mk(), max_ticks=600)
+    assert _by_uid(done_on) == _by_uid(done_off)
+    assert on.metrics.counters["prefix_hit_blocks"] > 0
+    on.pool.check()
+    on.prefix.clear()
+    assert on.pool.free_blocks == on.pool.capacity

@@ -192,3 +192,61 @@ def test_sharded_scan_stacked_layers():
     assert out["equal"]
     assert out["path"] == "fused"
     assert out["k_spec"] == "PartitionSpec(None, None, None, 'model')"
+
+
+def test_sharded_prefix_cache_matches_single_device_off():
+    """Prefix sharing is mesh-transparent: block tables (and the prefix
+    index) are replicated host state, so the sharded engine with the
+    cache ON must match the single-device engine with the cache OFF
+    token-for-token on a shared-prefix stream — while actually hitting
+    (adopted blocks are read by every model shard through the same
+    replicated table)."""
+    out = run_sub("""
+    cfg = get_reduced("opt_6_7b").replace(
+        remat=False, dtype="float32", n_heads=8, n_kv_heads=4, head_dim=16)
+    model = Model(cfg)
+    params = f32(model.init(jax.random.PRNGKey(0)))
+
+    def shared(cfg, base_uid=0, max_new=4):
+        rng = np.random.default_rng(21)
+        prefix = rng.integers(0, cfg.vocab_size, (12,))
+        tails = [3, 6, 2, 5]
+        return [Request(uid=base_uid + i,
+                        prompt=np.concatenate(
+                            [prefix, rng.integers(0, cfg.vocab_size,
+                                                  (int(t),))]),
+                        max_new_tokens=max_new)
+                for i, t in enumerate(tails)]
+
+    base = PagedServeEngine(model, params, **KW)
+    ref = tokens_of(base.run(shared(cfg)))
+    base.pool.check()
+
+    # wave 1 (all admit cold, registering the prefix) then wave 2 (same
+    # prompts, fresh uids) through the SAME sharded engine: wave 2 must
+    # hit the warm index and still match the cold single-device run
+    mesh = make_mesh((2, 4), ("data", "model"))
+    eng = PagedServeEngine(model, params, mesh=mesh, paged_kernel="fused",
+                           prefix_cache=True, **KW)
+    eng.run(shared(cfg))
+    got = tokens_of(eng.run(shared(cfg, base_uid=10)))
+    eng.pool.check()
+    s = eng.metrics.summary()
+    eng.prefix.clear()
+    want = {}
+    for uid, toks in ref.items():
+        want[uid] = toks
+        want[str(int(uid) + 10)] = toks
+    print(json.dumps({
+        "equal": got == want,
+        "path": eng.decode_path,
+        "hit_blocks": s["counters"]["prefix_hit_blocks"],
+        "hit_rate": s["prefix_cache"]["hit_rate"],
+        "pool_free_after_clear":
+            eng.pool.free_blocks == eng.pool.capacity,
+    }))
+    """, prelude=_COMMON)
+    assert out["equal"], "sharded prefix-cache run diverged from baseline"
+    assert out["path"] == "fused"
+    assert out["hit_blocks"] > 0 and out["hit_rate"] > 0
+    assert out["pool_free_after_clear"]
