@@ -233,7 +233,11 @@ class PrefixCache:
                 break
             key = self._key(parent, chunk)
             e = self.entries.get(key)
-            if e is None or e.tokens != chunk:
+            # verify the chunk's tokens AND the walked chain's parent key:
+            # with both, induction over j proves the full token history
+            # matches, so a hash collision (same key, different prefix)
+            # degrades to a miss instead of adopting foreign KV
+            if e is None or e.tokens != chunk or e.parent != parent:
                 break
             self._touch(e)
             blocks.append(e.block)
@@ -270,19 +274,26 @@ class PrefixCache:
         survives its writer).  A duplicate key with identical tokens is
         a no-op returning the existing key (the writer keeps its
         private copy; future admissions dedup against the first).
-        Returns None on a key collision with DIFFERENT tokens — the
-        caller must stop registering this chain (lookup token
-        verification already makes the collision unadoptable)."""
+        Returns None — the caller must stop registering this chain —
+        on a key collision with DIFFERENT tokens or parent (lookup's
+        verification already makes the collision unadoptable), and
+        when ``parent_key``'s entry has been evicted (a dedup'd chain
+        whose backing entry retired): continuing would create a root
+        entry that lookup can never reach, pinning a block for nothing
+        and polluting the CoW metrics."""
         assert len(chunk) == self.pool.block_size, "only full blocks cache"
         key = self._key(parent_key, chunk)
         e = self.entries.get(key)
         if e is not None:
-            if e.tokens != chunk:
+            if e.tokens != chunk or e.parent != parent_key:
                 return None
             self._touch(e)
             return key
-        parent = self.entries.get(parent_key) if parent_key is not None \
-            else None
+        parent = None
+        if parent_key is not None:
+            parent = self.entries.get(parent_key)
+            if parent is None:
+                return None
         e = _Entry(key=key, parent=parent_key, tokens=tuple(chunk),
                    block=block, depth=0 if parent is None else
                    parent.depth + 1)
@@ -297,12 +308,22 @@ class PrefixCache:
 
     # ------------------------------------------------------------------
     def evictable(self) -> int:
-        """Blocks the cache could free on demand: entries whose block
-        has no holder but the cache.  (Sequences hold chain *prefixes*,
-        so refcounts are non-increasing with depth — every cache-only
-        entry is reachable by repeated cache-only-leaf eviction.)"""
-        return sum(1 for e in self.entries.values()
-                   if self.pool.refcount(e.block) == 1)
+        """Blocks the cache could ACTUALLY free on demand via iterated
+        leaf-first eviction: an entry is freeable iff its block has no
+        holder but the cache AND every child entry is freeable (evict()
+        only drops childless entries, so a pinned descendant blocks its
+        whole ancestor chain).  Counting every refcount-1 entry would
+        overcount — dedup can leave a cache-only parent above a pinned
+        child (refcounts are not non-increasing with depth) — and an
+        optimistic budget here makes the scheduler over-admit and then
+        fail allocations evict() cannot actually cover."""
+        freeable: Dict[int, bool] = {}
+        # children always sit one level deeper than their parent, so a
+        # deepest-first sweep sees every child before its parent
+        for e in sorted(self.entries.values(), key=lambda e: -e.depth):
+            freeable[e.key] = (self.pool.refcount(e.block) == 1 and
+                               all(freeable[k] for k in e.children))
+        return sum(freeable.values())
 
     def _drop(self, e: _Entry) -> None:
         del self.entries[e.key]

@@ -354,13 +354,19 @@ class Scheduler:
                 continue
             length = min(seq.prefill_target - seq.kv_len, self.buckets[-1])
             need = self.pool.blocks_for(seq.kv_len + length) - len(seq.table)
-            while need > self._available():
+            while need > 0:
+                if need <= self._available():
+                    blks = self._alloc(seq.uid, need)
+                    if blks is not None:
+                        seq.table.extend(blks)
+                        break
+                    # _available() promised blocks eviction could not
+                    # actually deliver (e.g. a cache-only parent pinned
+                    # under a live child) — fall through and preempt
                 victim = self._youngest(than=seq)
                 if victim is None:
                     return                     # defer the chunk to a later tick
                 self._record_preempt(plan, victim)
-            if need > 0:
-                seq.table.extend(self._alloc(seq.uid, need))
             plan.prefill = PrefillChunk(seq=seq, start=seq.kv_len,
                                         length=length)
             return

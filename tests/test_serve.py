@@ -19,8 +19,8 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import Model
-from repro.serve import (BlockPool, PagedServeEngine, Request, Scheduler,
-                         ServeEngine, set_block_tables)
+from repro.serve import (BlockPool, PagedServeEngine, PrefixCache, Request,
+                         Scheduler, ServeEngine, set_block_tables)
 
 RNG = jax.random.PRNGKey(0)
 
@@ -772,7 +772,6 @@ def test_admission_budget_counts_only_new_blocks():
     is almost fully cache-resident must admit even when the free-block
     count alone could not cover its naive footprint — hit blocks are
     adopted, not allocated, so only NEW blocks count."""
-    from repro.serve import PrefixCache
     pool = BlockPool(num_blocks=9, block_size=4)      # 8 usable
     cache = PrefixCache(pool)
     sched = Scheduler(pool, rows=2, buckets=(8,), max_blocks_per_seq=8,
@@ -859,3 +858,121 @@ def test_prefix_cache_equivalence_under_preemption():
     on.pool.check()
     on.prefix.clear()
     assert on.pool.free_blocks == on.pool.capacity
+
+
+def test_evictable_excludes_parents_pinned_under_live_children():
+    """Regression: dedup can leave a cache-only PARENT entry above a
+    child entry whose block a live sequence pins (refcounts are not
+    non-increasing with depth).  Leaf-first eviction cannot free that
+    parent, so ``evictable()`` must not count it — an optimistic budget
+    made the scheduler over-admit and then crash on a failed alloc."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    A, B = (0, 1, 2, 3), (4, 5, 6, 7)
+    b1, b2 = pool.alloc(1, 2)                  # seq1's private blocks
+    b3, b4 = pool.alloc(2, 2)                  # seq2's private blocks
+    # both cold requests write chunk A privately; seq1 registers first,
+    # seq2 dedups onto seq1's b1 and keeps its own b3 unindexed
+    k0 = cache.register(None, A, b1)
+    assert cache.register(None, A, b3) == k0
+    # next tick seq2 registers its chunk-B block FIRST, so the CHILD
+    # entry points at the second sequence's private block b4
+    k1 = cache.register(k0, B, b4)
+    assert cache.register(k0, B, b2) == k1
+    pool.free([b1, b2], 1)                     # seq1 retires
+    # the shape: parent entry -> b1 (cache-only), child entry -> b4
+    # (pinned by live seq2) — a cache-only parent above a pinned child
+    assert pool.refcount(b1) == 1 and pool.refcount(b4) == 2
+    assert cache.evictable() == 0              # was 1: the overcount
+    assert cache.evict(5) == 0                 # promise == delivery
+    pool.free([b3, b4], 2)                     # seq2 retires
+    assert cache.evictable() == 2              # whole chain now freeable
+    assert cache.evict(5) == 2
+    pool.check()
+    assert pool.free_blocks == pool.capacity
+
+
+def test_prefill_defers_when_eviction_underdelivers():
+    """Regression: when ``_available()`` over-promises (historically the
+    ``evictable()`` overcount) and ``_alloc`` still comes back empty,
+    ``_plan_prefill`` must preempt or defer the chunk — never crash the
+    tick extending a table with None."""
+    pool = BlockPool(num_blocks=5, block_size=4)      # 4 usable
+    cache = PrefixCache(pool)
+    sched = Scheduler(pool, rows=2, buckets=(8,), max_blocks_per_seq=4,
+                      prefix_cache=cache)
+    cache.evictable = lambda: 2        # lie: promise blocks evict() can't free
+    a = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                max_new_tokens=8)
+    b = Request(uid=1, prompt=np.arange(8, dtype=np.int32) + 1,
+                max_new_tokens=1)
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.plan_tick()           # over-admits b on the lied budget
+    assert {s.uid for s in plan.admitted} == {0, 1}
+    assert plan.prefill is not None and plan.prefill.seq.uid == 0
+    plan.prefill.seq.kv_len += plan.prefill.length
+    # a's decode drains the free list to 0; b's prefill needs 2 blocks,
+    # _available() still claims 2, but eviction delivers nothing and b
+    # has no younger victim — the chunk must be deferred, not crash
+    plan = sched.plan_tick()
+    assert [s.uid for s in plan.decode] == [0]
+    assert plan.prefill is None
+    bseq = next(s for s in sched.running if s.uid == 1)
+    assert bseq.kv_len == 0 and bseq.table == []
+    sched.finish(next(s for s in sched.running if s.uid == 0))
+    plan = sched.plan_tick()           # pressure gone: b prefills now
+    assert plan.prefill is not None and plan.prefill.seq.uid == 1
+    pool.check()
+
+
+def test_lookup_and_register_verify_parent_on_key_collision():
+    """Regression: a key collision between (parentA, chunk) and
+    (parentB, chunk) must degrade to a miss, never adopt KV computed
+    under a different prefix.  Forced here with a degenerate chain hash
+    that ignores the parent entirely."""
+    pool = BlockPool(num_blocks=6, block_size=4)
+    cache = PrefixCache(pool)
+    cache._key = lambda parent, chunk: hash(chunk)    # drop the chain
+    X, Y = (0, 1, 2, 3), (4, 5, 6, 7)
+    b1, b2 = pool.alloc("w", 2)
+    k0 = cache.register(None, X, b1)
+    k1 = cache.register(k0, Y, b2)
+    assert k1 is not None
+    # querying [Y, ...] collides with the depth-1 entry at depth 0: the
+    # tokens match but the parent does not — must be a miss
+    hits, last = cache.lookup(list(Y + X), 2)
+    assert hits == [] and last is None
+    # the genuine chain still serves end-to-end
+    hits, last = cache.lookup(list(X + Y), 2)
+    assert hits == [b1, b2] and last == k1
+    # register's dedup branch applies the same parent check: the same
+    # colliding (None, Y) registration must refuse, not alias
+    b3 = pool.alloc("v", 1)[0]
+    assert cache.register(None, Y, b3) is None
+    pool.free([b3], "v")
+    pool.free([b1, b2], "w")
+    cache.clear()
+    pool.check()
+    assert pool.free_blocks == pool.capacity
+
+
+def test_register_with_evicted_parent_stops_chain():
+    """Regression: registering under a parent key whose entry has been
+    evicted (reachable when a sequence's chain key points at a dedup'd
+    entry backed by another, retired sequence's block) must stop the
+    chain — an orphaned root would be unreachable by lookup yet pin a
+    pool block and pollute the sharing metrics."""
+    pool = BlockPool(num_blocks=6, block_size=4)
+    cache = PrefixCache(pool)
+    b1 = pool.alloc("w", 1)[0]
+    k0 = cache.register(None, (0, 1, 2, 3), b1)
+    pool.free([b1], "w")                   # writer retires; cache-only
+    assert cache.evict(1) == 1             # parent entry evicted
+    b2 = pool.alloc("w", 1)[0]
+    assert cache.register(k0, (4, 5, 6, 7), b2) is None
+    assert len(cache) == 0                 # no orphaned root created
+    assert cache.lookup([4, 5, 6, 7], 1) == ([], None)
+    pool.free([b2], "w")
+    pool.check()
+    assert pool.free_blocks == pool.capacity
