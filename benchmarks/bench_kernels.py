@@ -2,8 +2,14 @@
 
 Wall-times here are CPU-interpret numbers — NOT TPU performance — but
 they pin correctness at benchmark scale and record the op-count ratios
-the TPU roofline uses.
+the TPU roofline uses.  ``--bench-json`` writes the tracked-scalar file
+for the perf-trajectory gate (``benchmarks.compare_trajectory``):
+kernel max-errors, the tuned-vs-default speedup floor and the paged
+pool-read ratio get a committed history.
 """
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -62,7 +68,7 @@ def _paged_attention_bench(rng):
         "kernels,paged_gather_oracle",
         lambda: jax.block_until_ready(
             paged_decode_ref(q, k, v, pos, tables, positions)), n=2)
-    return err
+    return err, live / total
 
 
 def _tuned_vs_default(rng):
@@ -87,7 +93,13 @@ def _tuned_vs_default(rng):
     return best_speedup
 
 
-def run():
+def _scalar(value, direction, rel_tol, **bounds):
+    s = {"value": float(value), "direction": direction, "rel_tol": rel_tol}
+    s.update(bounds)
+    return s
+
+
+def run(bench_json: str = ""):
     common.header("Kernel benches (interpret mode, correctness + timing)")
     rng = np.random.default_rng(0)
     M, N, B = 256, 512, 8
@@ -111,10 +123,43 @@ def run():
                  n=2)
     common.bench("kernels,dense_oracle",
                  lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
-    _paged_attention_bench(rng)
+    paged_err, read_ratio = _paged_attention_bench(rng)
     speedup = _tuned_vs_default(rng)
+    if bench_json:
+        # max-errors gate with generous relative slack (FP noise varies
+        # across BLAS builds) plus a hard abs_max safety net one decade
+        # under the assert thresholds above; the block-read ratio and
+        # the speedup floor are deterministic and pinned tight
+        scalars = {
+            "lut_gemm_maxerr": _scalar(err1, "lower", 3.0, abs_max=1e-3),
+            "bcq_matmul_maxerr": _scalar(err2, "lower", 3.0, abs_max=1e-3),
+            "paged_attention_maxerr":
+                _scalar(paged_err, "lower", 3.0, abs_max=1e-4),
+            "paged_kv_block_read_ratio":
+                _scalar(read_ratio, "lower", 0.0),
+            # timing-derived: the structural abs_min=1.0 floor is the
+            # real gate, the relative slack absorbs timer jitter
+            "tuned_speedup": _scalar(speedup, "higher", 0.9, abs_min=1.0),
+        }
+        data = {"schema_version": 1, "bench": "kernels",
+                "scalars": scalars,
+                "meta": {"source": "benchmarks.bench_kernels",
+                         "jax": jax.__version__}}
+        with open(bench_json, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"kernels,bench_json={bench_json}")
     return err1, err2, speedup
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-json", default="",
+                    help="write tracked scalars for the perf-trajectory "
+                         "gate (compare with benchmarks.compare_trajectory)")
+    args = ap.parse_args()
+    run(bench_json=args.bench_json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

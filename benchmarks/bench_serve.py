@@ -12,9 +12,15 @@ the fused path's bytes are strictly below the gathered path's and its
 decode logits are finite).  A third section replays a shared-prefix
 stream with the prefix cache on vs off at equal pool memory and asserts
 identical tokens, hit-rate > 0, blocks saved > 0, effective capacity
-peaking above 1x and a single-chunk warm-probe prefill.
+peaking above 1x and a single-chunk warm-probe prefill.  A fourth
+section measures the event-trace overhead (trace on vs off on a warm
+engine, must stay <= 5% of tokens/s) and validates the exported Chrome
+trace.  ``--bench-json`` writes the schema-versioned tracked-scalar
+file the perf-trajectory gate (``benchmarks.compare_trajectory``)
+diffs against the committed baseline.
 
     PYTHONPATH=src python -m benchmarks.bench_serve [--json out.json]
+        [--bench-json BENCH_serve.json] [--trace-out trace.json]
 
 ``run()`` is the ``benchmarks.run`` registry entry (smoke scale).
 """
@@ -261,6 +267,95 @@ def bench_prefix_cache(model, params, cfg, *, max_new=6, block_size=8,
     return rows
 
 
+def bench_trace_overhead(model, params, cfg, *, requests=4, max_new=24,
+                         num_blocks=24, block_size=8, max_batch=3,
+                         trials=3, trace_out=""):
+    """Tokens/s with the event-level trace ON vs OFF on the same warm
+    engine (jit caches hot, identical greedy request stream), plus
+    structural checks on the produced trace: it must validate as Chrome
+    trace-event JSON with >= 1 span per engine phase
+    (admission/prefill/decode/sample) and a track per request.
+
+    The acceptance bar is overhead <= 5% of tokens/s.  At smoke scale a
+    single run is tens of milliseconds, where box noise (frequency
+    scaling, co-tenants) swings wall-time far more than 5%, so the
+    decode leg is kept long (``max_new``), the modes are timed
+    ``trials`` times interleaved, and the best run per mode wins —
+    a scheduler hiccup must not masquerade as tracing cost."""
+    from repro import obs
+
+    eng = PagedServeEngine(model, params, num_blocks=num_blocks,
+                           block_size=block_size, max_batch=max_batch,
+                           max_seq_len=128, prefill_buckets=(16, 32))
+    # untimed warm-up: compile both entry points so neither timed mode
+    # pays jit time
+    eng.run(_requests(cfg, requests, max_new, seed=3), max_ticks=600)
+
+    tracer = obs.Tracer()
+    times = {"off": [], "on": []}
+    toks_by_mode = {}
+
+    def _trial_pair():
+        for mode in ("off", "on"):
+            eng.attach_tracer(tracer if mode == "on" else None)
+            reqs = _requests(cfg, requests, max_new, seed=4)
+            eng.ticks = 0
+            t0 = time.perf_counter()
+            eng.run(reqs, max_ticks=600)
+            times[mode].append(time.perf_counter() - t0)
+            assert all(r.done and r.error is None for r in reqs)
+            toks = {r.uid: tuple(r.out_tokens) for r in reqs}
+            assert toks_by_mode.setdefault(mode, toks) == toks
+
+    def _overhead():
+        n = sum(len(t) for t in toks_by_mode["off"].values())
+        ts = {m: n / min(v) for m, v in times.items()}
+        return ts, (1.0 - ts["on"] / ts["off"]) * 100.0
+
+    for _ in range(trials):
+        _trial_pair()
+    tok_s, overhead_pct = _overhead()
+    # best-of-min is robust against a slow trial, but a whole slow
+    # stretch can still inflate one mode's min: buy more evidence before
+    # declaring the budget blown (min times only ever improve, so extra
+    # pairs can't turn a genuine regression into a pass)
+    while overhead_pct > 5.0 and len(times["off"]) < trials + 4:
+        _trial_pair()
+        tok_s, overhead_pct = _overhead()
+    eng.attach_tracer(None)
+    # greedy decode: tracing must not change a single token
+    assert toks_by_mode["on"] == toks_by_mode["off"], \
+        "tracing changed generated tokens"
+
+    # structural acceptance: the trace loads and covers every phase
+    chrome = obs.to_chrome(tracer)
+    errs = obs.validate_chrome(chrome)
+    assert not errs, f"trace failed validation: {errs}"
+    spans = {e["name"] for e in tracer.events if e["ph"] == "X"}
+    for phase in ("admission", "prefill_chunk", "decode_dispatch",
+                  "sample", "device_sync", "tick"):
+        assert phase in spans, f"no {phase!r} span in trace: {sorted(spans)}"
+    req_tracks = {t for t in tracer.tracks() if t.startswith("req/")}
+    assert req_tracks == {f"req/{u}" for u in toks_by_mode["on"]}, req_tracks
+    if trace_out:
+        obs.save_chrome(tracer, trace_out)
+        print(f"serve,trace_out={trace_out}")
+
+    row = {
+        "tok_per_s_trace_off": tok_s["off"],
+        "tok_per_s_trace_on": tok_s["on"],
+        "trace_overhead_pct": overhead_pct,
+        "trace_events": len(tracer.events),
+        "trace_dropped": tracer.dropped,
+    }
+    print(f"serve,trace_overhead_pct={overhead_pct:.2f},"
+          f"tok_s_off={tok_s['off']:.1f},tok_s_on={tok_s['on']:.1f},"
+          f"events={row['trace_events']}")
+    assert overhead_pct <= 5.0, \
+        f"trace overhead {overhead_pct:.2f}% exceeds the 5% budget"
+    return row
+
+
 _SHARDED_PROG = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -349,8 +444,62 @@ def bench_sharded(*, requests=4, max_new=6):
     return out["rows"]
 
 
+def _scalar(value, direction, rel_tol, **bounds):
+    s = {"value": float(value), "direction": direction, "rel_tol": rel_tol}
+    s.update(bounds)
+    return s
+
+
+def write_bench_json(path, rows, kernel_rows, prefix_rows, trace_row,
+                     bits):
+    """Schema-versioned tracked-scalar file for the perf-trajectory gate
+    (``benchmarks.compare_trajectory``).  Wall-clock scalars get loose
+    tolerances (CI-runner variance is large on shared boxes); scalars
+    that are deterministic functions of the workload (KV bytes/token,
+    prefix hit rate, probe chunk count) are pinned tight."""
+    dense = next(r for r in rows if r["backend"] == "dense")
+    bcq = next(r for r in rows if r["backend"].startswith("bcq"))
+    fused = next(r for r in kernel_rows if r["paged_kernel"] == "fused")
+    pfx_on = next(r for r in prefix_rows if r["prefix_cache"] == "on")
+    scalars = {
+        # wall-clock: gate only order-of-magnitude collapses
+        "tokens_per_s_dense": _scalar(dense["tok_per_s"], "higher", 0.8),
+        f"tokens_per_s_bcq{bits}": _scalar(bcq["tok_per_s"], "higher", 0.8),
+        "ttft_ms_p50_dense": _scalar(dense["ttft_ms_p50"], "lower", 1.5),
+        "ttft_ms_p95_dense": _scalar(dense["ttft_ms_p95"], "lower", 1.5),
+        # deterministic analytic/counting scalars: pinned (near-)exactly
+        "kv_bytes_per_token_fused":
+            _scalar(fused["kv_bytes_per_token_fused"], "lower", 0.05),
+        "kv_bytes_per_token_gathered":
+            _scalar(fused["kv_bytes_per_token_gathered"], "lower", 0.05),
+        "prefix_hit_rate":
+            _scalar(pfx_on["prefix_hit_rate"], "higher", 0.0),
+        "prefix_blocks_saved":
+            _scalar(pfx_on["blocks_saved"], "higher", 0.0),
+        "effective_capacity_peak":
+            _scalar(pfx_on["effective_capacity_peak"], "higher", 0.05),
+        "probe_prefill_chunks":
+            _scalar(pfx_on["probe_prefill_chunks"], "lower", 0.0),
+        # trace overhead: relative drift is noise, the absolute 5%
+        # budget is the contract
+        "trace_overhead_pct":
+            _scalar(trace_row["trace_overhead_pct"], "lower", 10.0,
+                    abs_max=5.0),
+    }
+    data = {"schema_version": 1, "bench": "serve", "scalars": scalars,
+            "meta": {"source": "benchmarks.bench_serve",
+                     "jax": jax.__version__,
+                     "trace_events": trace_row["trace_events"]}}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"serve,bench_json={path}")
+    return data
+
+
 def run(json_path: str = "", requests: int = 6, max_new: int = 8,
-        bits: int = 3, sharded: bool = False):
+        bits: int = 3, sharded: bool = False, bench_json: str = "",
+        trace_out: str = ""):
     common.header("Paged serving bench (CPU smoke): dense vs BCQ backends")
     cfg = get_reduced("opt_6_7b").replace(max_seq_len=256, remat=False)
     model = Model(cfg)
@@ -370,6 +519,13 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
                                      max_new=max_new)
     common.header("Prefix cache: shared-prefix stream, cache on vs off")
     prefix_rows = bench_prefix_cache(model, params, cfg, max_new=max_new)
+    common.header("Trace overhead: event trace on vs off, warm engine")
+    # floor the decode length: timed runs must be long enough that box
+    # noise doesn't swamp the <= 5% overhead budget
+    trace_row = bench_trace_overhead(model, params, cfg,
+                                     requests=min(requests, 4),
+                                     max_new=max(max_new, 24),
+                                     trace_out=trace_out)
     sharded_rows = []
     if sharded:
         common.header("Sharded (2x4 mesh, 8 fake devices) vs single device")
@@ -379,15 +535,24 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
         with open(json_path, "w") as f:
             json.dump({"rows": rows, "paged_kernel_rows": kernel_rows,
                        "prefix_rows": prefix_rows,
+                       "trace_row": trace_row,
                        "sharded_rows": sharded_rows},
                       f, indent=2, sort_keys=True)
         print(f"serve,metrics_json={json_path}")
+    if bench_json:
+        write_bench_json(bench_json, rows, kernel_rows, prefix_rows,
+                         trace_row, bits)
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="", help="write per-backend metrics")
+    ap.add_argument("--bench-json", default="",
+                    help="write tracked scalars for the perf-trajectory "
+                         "gate (compare with benchmarks.compare_trajectory)")
+    ap.add_argument("--trace-out", default="",
+                    help="save the overhead section's Chrome trace here")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--bits", type=int, default=3)
@@ -396,7 +561,8 @@ def main():
                          "8-fake-device subprocess; ~1 min extra)")
     args = ap.parse_args()
     run(json_path=args.json, requests=args.requests, max_new=args.max_new,
-        bits=args.bits, sharded=args.sharded)
+        bits=args.bits, sharded=args.sharded, bench_json=args.bench_json,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

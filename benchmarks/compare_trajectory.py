@@ -1,0 +1,149 @@
+"""Perf-trajectory gate: compare a fresh ``BENCH_*.json`` against the
+committed baseline and FAIL LOUDLY on regression.
+
+The serving and kernel benches (``bench_serve --bench-json``,
+``bench_kernels --bench-json``) emit a schema-versioned file of tracked
+scalars; the repo commits a baseline per bench under
+``benchmarks/baselines/``.  CI's ``perf-trajectory`` job re-runs the
+benches and gates the diff here, so tokens/s, TTFT, KV bytes/token and
+prefix-cache effectiveness have a committed history instead of only
+living in uploaded artifacts (the ROADMAP's "no committed perf history
+at all").
+
+    PYTHONPATH=src python -m benchmarks.compare_trajectory \
+        BENCH_serve.json benchmarks/baselines/BENCH_serve.json
+
+Each tracked scalar in the BASELINE (the baseline's gate fields win —
+a regressing run cannot loosen its own tolerances) carries:
+
+  * ``value``     — the baseline measurement;
+  * ``direction`` — ``"higher"`` (throughput-like) or ``"lower"``
+    (latency/traffic-like): which way is better;
+  * ``rel_tol``   — allowed relative degradation vs the baseline value
+    (``0.8`` on wall-clock scalars absorbs CI-runner variance; ``0.0``
+    pins deterministic scalars exactly);
+  * ``abs_max`` / ``abs_min`` (optional) — absolute bounds that apply
+    regardless of the baseline value (e.g. trace overhead <= 5%).
+
+A scalar the baseline tracks but the current run no longer emits is a
+failure too (coverage must not silently shrink); a new scalar in the
+current run is reported as a candidate for the next baseline reseed.
+Improvements always pass.  To reseed after an intentional change, copy
+the fresh file over the committed baseline in the same PR and say why.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+SCHEMA_VERSION = 1
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema_version") != SCHEMA_VERSION:
+        raise SystemExit(f"{path}: schema_version "
+                         f"{data.get('schema_version')!r} != "
+                         f"{SCHEMA_VERSION} (regenerate or migrate)")
+    if "scalars" not in data or "bench" not in data:
+        raise SystemExit(f"{path}: not a BENCH file (missing scalars/bench)")
+    return data
+
+
+def _check(name: str, cur: float, base: dict) -> Tuple[str, str]:
+    """-> (status, detail); status in {"ok", "improved", "REGRESSED"}."""
+    bv = float(base["value"])
+    direction = base.get("direction", "higher")
+    tol = float(base.get("rel_tol", 0.0))
+    if direction not in ("higher", "lower"):
+        return "REGRESSED", f"baseline has bad direction {direction!r}"
+    if base.get("abs_max") is not None and cur > float(base["abs_max"]):
+        return "REGRESSED", f"{cur:.6g} > abs_max {base['abs_max']:.6g}"
+    if base.get("abs_min") is not None and cur < float(base["abs_min"]):
+        return "REGRESSED", f"{cur:.6g} < abs_min {base['abs_min']:.6g}"
+    if direction == "higher":
+        floor = bv * (1.0 - tol) if bv >= 0 else bv * (1.0 + tol)
+        if cur < floor:
+            return "REGRESSED", (f"{cur:.6g} < {floor:.6g} "
+                                 f"(baseline {bv:.6g}, rel_tol {tol})")
+        return ("improved" if cur > bv else "ok"), ""
+    ceil = bv * (1.0 + tol) if bv >= 0 else bv * (1.0 - tol)
+    if cur > ceil:
+        return "REGRESSED", (f"{cur:.6g} > {ceil:.6g} "
+                             f"(baseline {bv:.6g}, rel_tol {tol})")
+    return ("improved" if cur < bv else "ok"), ""
+
+
+def compare(current: dict, baseline: dict) -> Tuple[List[str], List[dict]]:
+    """-> (failures, report_rows).  Empty failures == gate passes."""
+    failures: List[str] = []
+    rows: List[dict] = []
+    if current.get("bench") != baseline.get("bench"):
+        failures.append(f"bench mismatch: current {current.get('bench')!r} "
+                        f"vs baseline {baseline.get('bench')!r}")
+        return failures, rows
+    cur_scalars = current["scalars"]
+    for name, base in sorted(baseline["scalars"].items()):
+        cur = cur_scalars.get(name)
+        if cur is None:
+            failures.append(f"{name}: tracked scalar missing from the "
+                            "current run (coverage regression)")
+            rows.append({"scalar": name, "baseline": base["value"],
+                         "current": None, "status": "MISSING"})
+            continue
+        status, detail = _check(name, float(cur["value"]), base)
+        if status == "REGRESSED":
+            failures.append(f"{name}: {detail}")
+        rows.append({"scalar": name, "baseline": base["value"],
+                     "current": cur["value"], "status": status,
+                     "detail": detail})
+    for name in sorted(set(cur_scalars) - set(baseline["scalars"])):
+        rows.append({"scalar": name, "baseline": None,
+                     "current": cur_scalars[name]["value"],
+                     "status": "new (reseed baseline to track)"})
+    return failures, rows
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when a tracked perf scalar regresses beyond "
+                    "its baseline tolerance")
+    ap.add_argument("current", help="fresh BENCH_*.json from this run")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    args = ap.parse_args(argv)
+    current, baseline = load(args.current), load(args.baseline)
+    failures, rows = compare(current, baseline)
+    name = current.get("bench", "?")
+    print(f"perf-trajectory[{name}]: {args.current} vs {args.baseline}")
+    w = max([len(r["scalar"]) for r in rows] + [6])
+    print(f"  {'scalar':<{w}} {'baseline':>12} {'current':>12}  status")
+    for r in rows:
+        print(f"  {r['scalar']:<{w}} {_fmt(r['baseline']):>12} "
+              f"{_fmt(r['current']):>12}  {r['status']}"
+              + (f" ({r['detail']})" if r.get("detail") else ""))
+    if failures:
+        print(f"\nPERF TRAJECTORY REGRESSION ({name}): "
+              f"{len(failures)} tracked scalar(s) regressed beyond "
+              "tolerance:")
+        for f in failures:
+            print(f"  !! {f}")
+        print("If this regression is intentional, reseed the baseline "
+              "(copy the fresh BENCH file over the committed one) in the "
+              "same PR and explain why in the PR description.")
+        return 1
+    print(f"perf-trajectory[{name}]: PASS "
+          f"({len(rows)} scalars within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,13 @@ blocks across requests with a common block-aligned prompt prefix —
 refcounted adoption at admission, copy-on-write by recompute on the
 first divergent or partially-filled block (see ``docs/serving.md``).
 
+``--trace-out trace.json`` records an event-level serving trace (spans
+for admission, prefix lookups, prefill chunks, decode dispatch, device
+sync, sampling, preemptions and evictions, plus one track per request)
+and writes Chrome trace-event JSON — open it in Perfetto or
+``chrome://tracing``; ``--trace-timeline N`` also prints the host-side
+per-request timeline table.  See ``docs/observability.md``.
+
 ``--mesh auto`` (or an explicit ``DxM`` shape like ``2x4``) serves the
 paged engine sharded over a ``("data", "model")`` mesh: KV pool leaves
 shard over kv_heads (head_dim fallback for narrow-GQA), params ride
@@ -158,6 +165,18 @@ def main():
                     help="print tokens as they are generated")
     ap.add_argument("--metrics-json", default="",
                     help="write the metrics summary to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="[paged engine] record an event-level serving "
+                         "trace and write it as Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev or "
+                         "chrome://tracing; see docs/observability.md)")
+    ap.add_argument("--trace-timeline", type=int, default=0, metavar="N",
+                    help="with --trace-out: also print the first N rows "
+                         "of the host-side per-request timeline table")
+    ap.add_argument("--trace-profiler-bridge", action="store_true",
+                    help="with --trace-out: wrap host spans in "
+                         "jax.profiler annotations so device profiles "
+                         "line up with the serving trace")
     ap.add_argument("--pretune", action="store_true",
                     help="autotune kernel configs for this model's layer "
                          "shapes before serving (persists to the JSON "
@@ -286,6 +305,16 @@ def main():
     if args.prefix_cache is not None and engine != "paged":
         raise SystemExit("--prefix-cache requires the paged engine "
                          "(the slots engine has no shared KV pool)")
+    tracer = None
+    if args.trace_out:
+        if engine != "paged":
+            raise SystemExit("--trace-out requires the paged engine "
+                             "(the slots engine has no trace hooks)")
+        from repro import obs
+        tracer = obs.Tracer(profiler_bridge=args.trace_profiler_bridge)
+    elif args.trace_timeline or args.trace_profiler_bridge:
+        raise SystemExit("--trace-timeline/--trace-profiler-bridge "
+                         "require --trace-out")
     if engine == "paged":
         eng = PagedServeEngine(model, params, num_blocks=args.num_blocks,
                                block_size=args.block_size,
@@ -295,7 +324,7 @@ def main():
                                pretune=args.pretune,
                                paged_kernel=args.paged_kernel,
                                prefix_cache=args.prefix_cache != "off",
-                               mesh=mesh)
+                               mesh=mesh, tracer=tracer)
         print(f"[launch.serve] paged-kernel={args.paged_kernel} -> "
               f"decode path: {eng.decode_path}")
     else:
@@ -336,6 +365,15 @@ def main():
         if args.metrics_json:
             eng.metrics.to_json(args.metrics_json)
             print(f"[launch.serve] metrics -> {args.metrics_json}")
+        if tracer is not None:
+            from repro import obs
+            obs.save_chrome(tracer, args.trace_out)
+            print(f"[launch.serve] trace -> {args.trace_out} "
+                  f"({len(tracer.events)} events, {tracer.dropped} "
+                  f"dropped; open in https://ui.perfetto.dev)")
+            if args.trace_timeline:
+                print(obs.format_timeline(tracer,
+                                          max_rows=args.trace_timeline))
 
 
 if __name__ == "__main__":

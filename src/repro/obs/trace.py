@@ -1,0 +1,220 @@
+"""Event-level serving trace: a bounded ring of spans and instants.
+
+``Tracer`` is the low-overhead recorder the serving stack threads its
+hooks through (``serve/engine.py``, ``serve/scheduler.py``,
+``tune/dispatch.py``).  Design constraints, in order:
+
+  * **cheap when off** — engines hold a :data:`NULL` tracer by default;
+    every hook is a no-op method call, no branching at call sites;
+  * **bounded** — events land in a ring buffer (``capacity`` newest
+    kept, ``dropped`` counts the rest), so a week-long serve cannot OOM
+    the host because someone left tracing on;
+  * **deterministic under test** — the clock is injectable (tests pass
+    a fake), timestamps are microseconds since tracer construction;
+  * **schema-versioned** — every exported artifact carries
+    :data:`SCHEMA_VERSION` so downstream consumers (Perfetto loaders,
+    the perf-trajectory gate, future async-loop debugging) can detect
+    drift.
+
+Events are plain dicts (see :meth:`Tracer.emit`) with two shapes:
+complete spans (``ph == "X"``, with ``dur``) and instants
+(``ph == "i"``).  Every event lives on a *track*: ``"engine/<phase>"``
+for engine phases (tick, admission, prefix, prefill, decode, sync,
+sample, preempt, evict, kernel) or ``"req/<uid>"`` for per-request
+timelines.  ``obs/export.py`` maps tracks onto Chrome trace-event
+process/thread lanes.
+
+The module-level *active tracer* is how code that cannot be handed a
+tracer instance (the ``tune.dispatch`` config resolver, called from
+deep inside op wrappers) still records: engines ``set_active`` their
+tracer at construction and dispatch calls
+:func:`record_kernel_config`, which no-ops unless a tracer is active.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from contextlib import contextmanager, nullcontext
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+# the engine-phase track catalogue; export groups these into one
+# process lane, in this order
+ENGINE_TRACKS = (
+    "engine/tick", "engine/admission", "engine/prefix", "engine/prefill",
+    "engine/decode", "engine/sync", "engine/sample", "engine/preempt",
+    "engine/evict", "engine/kernel",
+)
+
+
+def req_track(uid) -> str:
+    """The per-request track name for a request uid."""
+    return f"req/{uid}"
+
+
+class Tracer:
+    """Span/instant recorder over an injectable clock and a ring buffer.
+
+    ``capacity`` bounds retained events (newest win); ``profiler_bridge``
+    additionally wraps every span in a ``jax.profiler.TraceAnnotation``
+    so host spans line up with device profiles captured via
+    ``jax.profiler.trace`` (silently disabled when jax is unavailable —
+    the tracer itself has no jax dependency).
+    """
+
+    def __init__(self, clock=time.perf_counter, capacity: int = 1 << 16,
+                 profiler_bridge: bool = False):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.clock = clock
+        self.capacity = capacity
+        self._t0 = clock()
+        self._buf: deque = deque(maxlen=capacity)
+        self.total = 0              # events ever emitted (incl. dropped)
+        self.tick: int = -1         # engine tick, tagged onto every event
+        self._annotation = None
+        if profiler_bridge:
+            try:
+                from jax.profiler import TraceAnnotation
+                self._annotation = TraceAnnotation
+            except Exception:       # jax absent or too old: host-only trace
+                self._annotation = None
+
+    # ------------------------------------------------------------------
+    def now_us(self) -> float:
+        """Microseconds since tracer construction."""
+        return (self.clock() - self._t0) * 1e6
+
+    def emit(self, name: str, ph: str, ts: float, track: str,
+             cat: str = "engine", dur: Optional[float] = None,
+             args: Optional[dict] = None) -> None:
+        ev = {"name": name, "ph": ph, "ts": ts, "track": track, "cat": cat}
+        if dur is not None:
+            ev["dur"] = dur
+        a = dict(args) if args else {}
+        if self.tick >= 0 and "tick" not in a:
+            a["tick"] = self.tick
+        if a:
+            ev["args"] = a
+        self._buf.append(ev)
+        self.total += 1
+
+    def instant(self, name: str, *, track: str = "engine/tick",
+                cat: str = "engine", **args) -> None:
+        self.emit(name, "i", self.now_us(), track, cat, args=args)
+
+    @contextmanager
+    def span(self, name: str, *, track: str = "engine/tick",
+             cat: str = "engine", **args):
+        """Record a complete span (``ph == "X"``) around the body."""
+        bridge = (self._annotation(name) if self._annotation is not None
+                  else nullcontext())
+        t0 = self.now_us()
+        try:
+            with bridge:
+                yield self
+        finally:
+            self.emit(name, "X", t0, track, cat, dur=self.now_us() - t0,
+                      args=args)
+
+    # ------------------------------------------------------------------
+    @property
+    def events(self) -> List[dict]:
+        return list(self._buf)
+
+    @property
+    def dropped(self) -> int:
+        return self.total - len(self._buf)
+
+    def tracks(self) -> List[str]:
+        """Distinct tracks with at least one event, engine lanes first
+        (catalogue order), then request lanes by first appearance."""
+        seen: Dict[str, None] = {}
+        for ev in self._buf:
+            seen.setdefault(ev["track"], None)
+        eng = [t for t in ENGINE_TRACKS if t in seen]
+        eng += [t for t in seen if t.startswith("engine/")
+                and t not in ENGINE_TRACKS]
+        return eng + [t for t in seen if not t.startswith("engine/")]
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self.total = 0
+
+
+class NullTracer:
+    """API-compatible no-op: engines hold this when tracing is off so
+    hook call sites stay branch-free.  ``span`` hands back a shared
+    null context; nothing is ever recorded."""
+
+    tick = -1
+    capacity = 0
+    total = 0
+    dropped = 0
+    events: List[dict] = []
+
+    def emit(self, *a, **kw) -> None:
+        pass
+
+    def instant(self, *a, **kw) -> None:
+        pass
+
+    def span(self, *a, **kw):
+        return nullcontext()
+
+    def now_us(self) -> float:
+        return 0.0
+
+    def tracks(self) -> List[str]:
+        return []
+
+    def clear(self) -> None:
+        pass
+
+
+NULL = NullTracer()
+
+# ---------------------------------------------------------------------------
+# active tracer: the escape hatch for call sites that cannot be handed a
+# tracer instance (kernel-config resolution inside op wrappers)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def set_active(tracer: Optional[Tracer]) -> None:
+    global _ACTIVE
+    _ACTIVE = tracer
+
+
+def get_active() -> Optional[Tracer]:
+    return _ACTIVE
+
+
+@contextmanager
+def activate(tracer: Optional[Tracer]):
+    prev = get_active()
+    set_active(tracer)
+    try:
+        yield tracer
+    finally:
+        set_active(prev)
+
+
+def record_kernel_config(kernel: str, source: str, config, **meta) -> None:
+    """Record one kernel-launch config resolution on the active tracer.
+
+    Called by ``tune.dispatch.kernel_config`` at every resolution point
+    so traces show which launches ran a *tuned* config and which fell
+    back to the *heuristic* (``source``: ``"cache"`` | ``"tuned"`` |
+    ``"heuristic"``).  Dispatch runs eagerly while jit traces, so these
+    events mark (re)compilations, not per-tick launches.  No-op without
+    an active tracer.
+    """
+    t = _ACTIVE
+    if t is None:
+        return
+    t.instant(f"kernel_config:{kernel}", track="engine/kernel",
+              cat="kernel", kernel=kernel, source=source,
+              config=config.to_dict(), **meta)

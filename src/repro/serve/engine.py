@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.obs import trace as obs_trace
+from repro.obs.trace import req_track
 from repro.serve.metrics import ServeMetrics
 from repro.serve.paging import BlockPool, PrefixCache, set_block_tables
 from repro.serve.scheduler import Scheduler
@@ -129,6 +131,14 @@ class PagedServeEngine:
     the fused kernel launches per model-shard through ``shard_map``.
     Scheduling, metrics and streaming are unchanged — the mesh is
     invisible above the decode step.
+
+    ``tracer`` (an :class:`repro.obs.Tracer`, or ``attach_tracer`` after
+    construction) records an event-level trace of every tick — spans for
+    admission, prefix lookup, prefill chunks, decode dispatch, device
+    sync and sampling on engine-phase tracks, plus a per-request track
+    from submit to retire — exportable as Chrome trace-event JSON via
+    ``repro.obs.save_chrome`` (see ``docs/observability.md``).  Off by
+    default; the hooks run against a no-op ``NullTracer``.
     """
 
     def __init__(self, model: Model, params, *, num_blocks: int = 64,
@@ -138,7 +148,7 @@ class PagedServeEngine:
                  paged_kernel: Optional[str] = None,
                  prefix_cache: bool = False,
                  mesh=None, shard_rules: Optional[dict] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, tracer=None):
         from repro.models.attention import kv_entry_bytes, paged_kernel_mode
         if paged_kernel is not None and paged_kernel != model.cfg.paged_kernel:
             # the mode is part of the (jitted) decode graph, so it lives
@@ -165,6 +175,13 @@ class PagedServeEngine:
             model.cfg, block_size=block_size, pages=self.max_blocks_per_seq,
             tp=self._tp)
         self._kv_entry_bytes = kv_entry_bytes(model.cfg)
+        # tracing: hooks below run unconditionally against a NullTracer
+        # when tracing is off (attach_tracer swaps in a live one).  The
+        # tracer goes active BEFORE pretune/jit so kernel-config
+        # resolutions inside tune.dispatch land in the trace too.
+        self.trace = obs_trace.NULL
+        if tracer is not None:
+            self.attach_tracer(tracer)
         if pretune:
             _pretune(model, params, [1, max_batch, *self.buckets])
         self.cache = model.init_paged_cache(max_batch, num_blocks,
@@ -176,7 +193,8 @@ class PagedServeEngine:
                                buckets=self.buckets,
                                max_blocks_per_seq=self.max_blocks_per_seq,
                                max_seq_len=max_seq_len,
-                               prefix_cache=self.prefix)
+                               prefix_cache=self.prefix,
+                               tracer=self.trace)
         self.metrics = ServeMetrics(clock)
         self.tables = np.full((max_batch, self.max_blocks_per_seq), -1,
                               np.int32)
@@ -224,8 +242,22 @@ class PagedServeEngine:
             out_shardings=(rep, c_sh))
 
     # ------------------------------------------------------------------
+    def attach_tracer(self, tracer) -> None:
+        """Attach (or detach with ``None``) an ``obs.Tracer``.  Also
+        makes it the module-level *active* tracer so kernel-config
+        resolutions in ``tune.dispatch`` — which cannot be handed an
+        instance — record into the same ring."""
+        self.trace = tracer if tracer is not None else obs_trace.NULL
+        obs_trace.set_active(tracer)
+        if hasattr(self, "sched"):
+            self.sched.trace = self.trace
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.metrics.on_submit(req.uid)
+        self.trace.instant("submit", track=req_track(req.uid), cat="request",
+                           uid=req.uid, prompt_len=len(req.prompt),
+                           max_new=req.max_new_tokens)
         self.sched.submit(req)
 
     def _sync_tables(self) -> None:
@@ -239,8 +271,14 @@ class PagedServeEngine:
         self.finished.append(seq.req)
         if seq.req.error:                     # e.g. "oom": truncated output
             self.metrics.on_fail(seq.req.uid)
+            self.trace.instant("fail", track=req_track(seq.req.uid),
+                               cat="request", uid=seq.req.uid,
+                               error=seq.req.error)
         else:
             self.metrics.on_complete(seq.req.uid)
+            self.trace.instant("complete", track=req_track(seq.req.uid),
+                               cat="request", uid=seq.req.uid,
+                               tokens=len(seq.req.out_tokens))
 
     def _decode_kv_bytes(self, decode) -> tuple:
         """Analytic per-step KV traffic of both decode paths (bytes).
@@ -263,6 +301,10 @@ class PagedServeEngine:
     def _emit_token(self, seq, tok: int) -> None:
         _emit(seq.req, tok)
         self.metrics.on_token(seq.req.uid)
+        self.trace.instant(
+            "first_token" if len(seq.req.out_tokens) == 1 else "token",
+            track=req_track(seq.req.uid), cat="request", uid=seq.req.uid,
+            pos=seq.kv_len)
         # retire at the TOKEN bound, not the block-rounded capacity:
         # when max_seq_len is not a multiple of block_size the last
         # block has slack that must never be decoded into (positions
@@ -275,7 +317,16 @@ class PagedServeEngine:
     def step(self) -> None:
         """One tick: plan (admit / top-up / preempt), then run one decode
         batch and at most one prefill chunk."""
-        plan = self.sched.plan_tick()
+        self.trace.tick = self.ticks
+        with self.trace.span("tick", track="engine/tick",
+                             free_blocks=self.pool.free_blocks,
+                             running=len(self.sched.running),
+                             waiting=len(self.sched.waiting)):
+            self._step_traced()
+
+    def _step_traced(self) -> None:
+        with self.trace.span("admission", track="engine/admission"):
+            plan = self.sched.plan_tick()
         # metrics identity: a sequence preempted in the same tick it was
         # admitted must appear in NEITHER list (the scheduler drops such
         # net no-op victims from plan.admitted) — otherwise on_admit /
@@ -285,15 +336,24 @@ class PagedServeEngine:
             "scheduler emitted admit+preempt for one seq in one tick"
         for req in plan.rejected:
             self.metrics.on_reject(req.uid)
+            self.trace.instant("reject", track=req_track(req.uid),
+                               cat="request", uid=req.uid, error=req.error)
             self.finished.append(req)
         for seq in plan.admitted:
             self.metrics.on_admit(seq.req.uid)
+            self.trace.instant("admit", track=req_track(seq.req.uid),
+                               cat="request", uid=seq.req.uid, row=seq.row,
+                               prefill_target=seq.prefill_target,
+                               prefix_hit_blocks=seq.prefix_hit,
+                               free_blocks=self.pool.free_blocks)
             if self.prefix is not None:
                 self.metrics.on_prefix_lookup(
                     seq.req.uid, seq.prefix_queried, seq.prefix_hit,
                     seq.shared_tokens, seq.cow_tokens)
         for seq in plan.preempted:
             self.metrics.on_preempt(seq.req.uid)
+            self.trace.instant("preempted", track=req_track(seq.req.uid),
+                               cat="request", uid=seq.req.uid)
         for seq in plan.failed:          # pool too dry even after preemption
             self._retire(seq)
         self._sync_tables()
@@ -329,18 +389,30 @@ class PagedServeEngine:
                 tokens[seq.row, 0] = seq.req.out_tokens[-1]
                 posv[seq.row] = seq.kv_len
             cache = set_block_tables(self.cache, tables)
-            with self._attn_scope():
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tokens), cache,
-                    jnp.asarray(posv))
-            logits = np.asarray(logits)
+            with self.trace.span("decode_dispatch", track="engine/decode",
+                                 rows=len(plan.decode),
+                                 path=self.decode_path,
+                                 uids=[s.uid for s in plan.decode]):
+                with self._attn_scope():
+                    logits, self.cache = self._decode(
+                        self.params, jnp.asarray(tokens), cache,
+                        jnp.asarray(posv))
+            # the host blocks HERE, not at dispatch: np.asarray forces
+            # the device computation (the async-host-loop roadmap item
+            # will hide exactly this span)
+            with self.trace.span("device_sync", track="engine/sync",
+                                 rows=len(plan.decode)):
+                logits = np.asarray(logits)
             fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
             self.metrics.on_decode_step(len(plan.decode), fused_b,
                                         gathered_b, self.decode_path)
-            for seq in plan.decode:
-                seq.kv_len += 1
-                tok = _sample(logits[seq.row], seq.req.temperature, self.rng)
-                self._emit_token(seq, tok)
+            with self.trace.span("sample", track="engine/sample",
+                                 rows=len(plan.decode)):
+                for seq in plan.decode:
+                    seq.kv_len += 1
+                    tok = _sample(logits[seq.row], seq.req.temperature,
+                                  self.rng)
+                    self._emit_token(seq, tok)
 
         if plan.prefill is not None:
             seq, start = plan.prefill.seq, plan.prefill.start
@@ -350,16 +422,24 @@ class PagedServeEngine:
             toks[0, :clen] = seq.tokens[start:start + clen]
             cache = set_block_tables(self.cache,
                                      self.tables[seq.row:seq.row + 1])
-            with self._attn_scope():
-                logits, self.cache = self._prefill_chunk(
-                    self.params, {"tokens": jnp.asarray(toks)}, cache,
-                    jnp.int32(start), jnp.int32(clen - 1))
+            with self.trace.span("prefill_chunk", track="engine/prefill",
+                                 uid=seq.uid, start=start, length=clen,
+                                 bucket=bucket):
+                with self._attn_scope():
+                    logits, self.cache = self._prefill_chunk(
+                        self.params, {"tokens": jnp.asarray(toks)}, cache,
+                        jnp.int32(start), jnp.int32(clen - 1))
+            self.trace.instant("prefill_chunk", track=req_track(seq.uid),
+                               cat="request", uid=seq.uid, start=start,
+                               length=clen)
             self.metrics.on_prefill_chunk()
             seq.kv_len += clen
             if seq.kv_len >= seq.prefill_target:
-                tok = _sample(np.asarray(logits)[0], seq.req.temperature,
-                              self.rng)
-                self._emit_token(seq, tok)
+                with self.trace.span("sample", track="engine/sample",
+                                     rows=1):
+                    tok = _sample(np.asarray(logits)[0],
+                                  seq.req.temperature, self.rng)
+                    self._emit_token(seq, tok)
 
         self.ticks += 1
         if self.prefix is not None:

@@ -30,6 +30,11 @@ class Histogram:
         self.counts = np.zeros(len(self.bounds) + 1, np.int64)
         self.total = 0.0
         self.n = 0
+        # exact running extrema: the reservoir can evict the true max on
+        # long runs, so percentile(100) under-reports it — min/max must
+        # never come from the sample set
+        self._min = float("inf")
+        self._max = float("-inf")
         self._samples: List[float] = []
         self._max_samples = max_samples
         self._rng = np.random.default_rng(0)
@@ -38,6 +43,8 @@ class Histogram:
         self.counts[np.searchsorted(self.bounds, v)] += 1
         self.total += v
         self.n += 1
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
         if len(self._samples) < self._max_samples:
             self._samples.append(v)
         else:                    # classic reservoir: keep each of the n
@@ -54,10 +61,18 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.n if self.n else 0.0
 
+    @property
+    def min(self) -> float:
+        return self._min if self.n else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self.n else 0.0
+
     def summary(self) -> Dict[str, float]:
         return {"n": self.n, "mean": self.mean,
                 "p50": self.percentile(50), "p95": self.percentile(95),
-                "max": self.percentile(100)}
+                "min": self.min, "max": self.max}
 
 
 class ServeMetrics:
@@ -76,7 +91,10 @@ class ServeMetrics:
                          "prefix_queried_blocks": 0, "prefix_hit_blocks": 0,
                          "prefix_tokens_saved": 0, "prefix_cow_events": 0,
                          "prefix_cow_tokens": 0, "prefix_evictions": 0}
-        self.decode_path: Optional[str] = None   # "fused" | "gather"
+        # decode steps per attention path: a single last-write string
+        # would hide mixed fused/gather runs (e.g. a capability
+        # negotiation change mid-run), so count per path and report both
+        self.decode_path_steps: Dict[str, int] = {}
         self.occupancy: List[float] = []       # one sample per tick
         self.active: List[int] = []            # concurrent running seqs
         self.sharing: List[float] = []         # logical/physical blocks
@@ -84,6 +102,9 @@ class ServeMetrics:
         self._t_submit: Dict[int, float] = {}
         self._t_last_tok: Dict[int, float] = {}
         self._t0 = clock()
+        # throughput clock starts at FIRST ADMISSION, not construction:
+        # engine construction / compile warmup would deflate tokens/s
+        self._t_first_admit: Optional[float] = None
 
     # ------------------------------------------------------------------
     def on_submit(self, uid: int) -> None:
@@ -92,6 +113,8 @@ class ServeMetrics:
 
     def on_admit(self, uid: int) -> None:
         self.counters["admitted"] += 1
+        if self._t_first_admit is None:
+            self._t_first_admit = self.clock()
 
     def on_reject(self, uid: int) -> None:
         self.counters["rejected"] += 1
@@ -167,11 +190,26 @@ class ServeMetrics:
         self.counters["decode_tokens"] += int(tokens)
         self.counters["kv_bytes_fused_est"] += int(fused_bytes)
         self.counters["kv_bytes_gathered_est"] += int(gathered_bytes)
-        self.decode_path = path
+        self.decode_path_steps[path] = self.decode_path_steps.get(path, 0) + 1
 
     # ------------------------------------------------------------------
+    @property
+    def decode_path(self) -> Optional[str]:
+        """The single decode path taken, or ``"mixed"`` when a run used
+        more than one (``decode_path_steps`` has the per-path counts)."""
+        if not self.decode_path_steps:
+            return None
+        if len(self.decode_path_steps) == 1:
+            return next(iter(self.decode_path_steps))
+        return "mixed"
+
     def throughput(self) -> float:
-        dt = self.clock() - self._t0
+        """Emitted tokens over wall time since the first admission (the
+        construction timestamp is only the fallback when nothing was
+        ever admitted, where the numerator is zero anyway)."""
+        t0 = self._t_first_admit if self._t_first_admit is not None \
+            else self._t0
+        dt = self.clock() - t0
         return self.counters["tokens_out"] / dt if dt > 0 else 0.0
 
     def summary(self) -> Dict:
@@ -190,6 +228,7 @@ class ServeMetrics:
             "peak_active": int(act.max()),
             "paged_kernel": {
                 "path": self.decode_path,
+                "steps_by_path": dict(self.decode_path_steps),
                 "kv_bytes_per_token_fused":
                     self.counters["kv_bytes_fused_est"] / ndec,
                 "kv_bytes_per_token_gathered":

@@ -54,6 +54,7 @@ import dataclasses
 from collections import deque
 from typing import List, Optional
 
+from repro.obs import trace as obs_trace
 from repro.serve.paging import BlockPool, PrefixCache
 
 
@@ -113,9 +114,13 @@ class Scheduler:
     def __init__(self, pool: BlockPool, rows: int, buckets,
                  max_blocks_per_seq: int, decode_reserve: int = 1,
                  max_seq_len: int = 0,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 tracer=None):
         self.pool = pool
         self.prefix = prefix_cache
+        # scheduling-decision trace hooks (prefix probes, evictions,
+        # preemptions); a NullTracer when observability is off
+        self.trace = tracer if tracer is not None else obs_trace.NULL
         self.buckets = sorted(buckets)
         self.max_blocks_per_seq = max_blocks_per_seq
         # the TOKEN bound, which is tighter than the block bound whenever
@@ -160,7 +165,12 @@ class Scheduler:
         """Allocate ``n`` blocks, evicting cache-only prefix blocks
         first when the free list alone cannot cover the request."""
         if self.prefix is not None and n > self.pool.free_blocks:
-            self.prefix.evict(n - self.pool.free_blocks)
+            want = n - self.pool.free_blocks
+            before = self.pool.free_blocks
+            self.prefix.evict(want)
+            self.trace.instant("prefix_evict", track="engine/evict",
+                               cat="scheduler", owner=owner, want=want,
+                               freed=self.pool.free_blocks - before)
         return self.pool.alloc(owner, n)
 
     # ------------------------------------------------------------------
@@ -202,6 +212,11 @@ class Scheduler:
         appearing in both lists, so the engine's admit/preempt metrics
         see it exactly zero times — the invariant the engine asserts.
         """
+        self.trace.instant("preempt", track="engine/preempt",
+                           cat="scheduler", uid=victim.uid,
+                           kv_len=victim.kv_len,
+                           blocks_held=len(victim.table),
+                           same_tick=victim in plan.admitted)
         self._preempt(victim)
         if victim in plan.admitted:
             plan.admitted.remove(victim)
@@ -278,11 +293,19 @@ class Scheduler:
             hits, last_key, cow = [], None, 0
             cap = (target - 1) // bs
             if self.prefix is not None and cap > 0:
+                t0 = self.trace.now_us()
                 toks = list(req.prompt) + req.out_tokens
                 hits, last_key = self.prefix.lookup(toks, cap)
                 tail = toks[len(hits) * bs:
                             min((len(hits) + 1) * bs, target)]
                 cow = self.prefix.cached_overlap(last_key, tail)
+                # emitted as a closed span so the probe's cost AND its
+                # outcome (hit/cow counts) land in one trace event
+                self.trace.emit("prefix_lookup", "X", t0, "engine/prefix",
+                                "scheduler", dur=self.trace.now_us() - t0,
+                                args=dict(uid=req.uid, queried_blocks=cap,
+                                          hit_blocks=len(hits),
+                                          cow_tokens=cow))
             # decode headroom, capped by the sequence's FINAL footprint:
             # a prompt that fills its last block only partially decodes
             # into that block, so demanding an extra reserve block it

@@ -100,6 +100,7 @@ def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,
     ``operands=(x2, w)`` (2-D activations + BCQWeight) enables
     tune-on-miss under ``REPRO_TUNE=auto``.
     """
+    from repro.obs.trace import record_kernel_config
     mode = tune_mode()
     if mode != "off":
         key = cache_mod.cache_key(kernel, b=b, m=m, n=n, dtype=dtype,
@@ -107,8 +108,10 @@ def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,
                                   interpret=interpret)
         hit = cache_mod.default_cache().lookup(key)
         if hit is not None:
-            return clamp_config(hit, kernel, b=b, m=m, n=n,
-                                group_size=group_size)
+            cfg = clamp_config(hit, kernel, b=b, m=m, n=n,
+                               group_size=group_size)
+            record_kernel_config(kernel, "cache", cfg, b=b, m=m, n=n)
+            return cfg
         if mode == "auto" and not interpret and operands is not None:
             import jax
             if not any(isinstance(o, jax.core.Tracer) for o in operands):
@@ -119,6 +122,12 @@ def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,
                                     cache=cache_mod.default_cache(),
                                     interpret=interpret)
                 cache_mod.default_cache().save()
+                record_kernel_config(kernel, "tuned", res.best,
+                                     b=b, m=m, n=n)
                 return res.best
-    return heuristic_config(kernel, b=b, m=m, n=n, mu=mu or 4,
-                            group_size=group_size)
+    cfg = heuristic_config(kernel, b=b, m=m, n=n, mu=mu or 4,
+                           group_size=group_size)
+    # traces show tuned-vs-fallback launch choices: "cache"/"tuned"
+    # resolutions above vs this deterministic heuristic default
+    record_kernel_config(kernel, "heuristic", cfg, b=b, m=m, n=n)
+    return cfg
