@@ -40,6 +40,15 @@ and writes Chrome trace-event JSON — open it in Perfetto or
 ``chrome://tracing``; ``--trace-timeline N`` also prints the host-side
 per-request timeline table.  See ``docs/observability.md``.
 
+``--async`` serves through the asyncio frontend
+(``repro.serve.frontend``) and the double-buffered engine tick: every
+request is submitted from its own coroutine, token streams are consumed
+concurrently, sampling runs on-device, and the device sync for step N
+hides behind the planning and dispatch of step N+1.  ``--deadline-ms``
+gives every third request a deadline so the demo exercises expiry and
+block release under load; outputs remain token-for-token identical to
+the synchronous engine.
+
 ``--mesh auto`` (or an explicit ``DxM`` shape like ``2x4``) serves the
 paged engine sharded over a ``("data", "model")`` mesh: KV pool leaves
 shard over kv_heads (head_dim fallback for narrow-GQA), params ride
@@ -161,6 +170,17 @@ def main():
                          "or an explicit DxM shape like 2x4")
     ap.add_argument("--tp", type=int, default=0,
                     help="model-parallel extent for --mesh auto")
+    ap.add_argument("--async", dest="async_engine", action="store_true",
+                    help="[paged engine] serve through the asyncio "
+                         "frontend with the double-buffered engine tick: "
+                         "concurrent per-request coroutines, on-device "
+                         "sampling, and step N's device sync hidden "
+                         "behind step N+1's dispatch (token-identical "
+                         "to the synchronous engine)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="with --async: give every third request this "
+                         "deadline so the demo exercises expiry and "
+                         "block release under load (0: no deadlines)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated")
     ap.add_argument("--metrics-json", default="",
@@ -305,6 +325,11 @@ def main():
     if args.prefix_cache is not None and engine != "paged":
         raise SystemExit("--prefix-cache requires the paged engine "
                          "(the slots engine has no shared KV pool)")
+    if args.async_engine and engine != "paged":
+        raise SystemExit("--async requires the paged engine (the slots "
+                         "engine has no double-buffered tick)")
+    if args.deadline_ms and not args.async_engine:
+        raise SystemExit("--deadline-ms requires --async")
     tracer = None
     if args.trace_out:
         if engine != "paged":
@@ -333,12 +358,16 @@ def main():
                           prefill_buckets=(16, 32, 64),
                           pretune=args.pretune)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
-                                               (int(rng.integers(4, 24)),)),
-                    max_new_tokens=args.max_new, on_token=on_token)
-            for i in range(args.requests)]
+    prompts = [rng.integers(0, cfg.vocab_size, (int(rng.integers(4, 24)),))
+               for _ in range(args.requests)]
     t0 = time.time()
-    done = eng.run(reqs)
+    if args.async_engine:
+        done = _run_async_demo(eng, prompts, args)
+    else:
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=args.max_new,
+                        on_token=on_token)
+                for i, p in enumerate(prompts)]
+        done = eng.run(reqs)
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[launch.serve] {len(done)} requests, {toks} tokens, "
@@ -351,6 +380,11 @@ def main():
               f"occupancy mean={s['occupancy']['mean']:.2f} "
               f"peak={s['occupancy']['peak']:.2f}  "
               f"preempted={s['counters']['preempted']}")
+        print(f"[launch.serve] queue delay "
+              f"p50={s['queue_delay_s']['p50']*1e3:.1f}ms  "
+              f"device busy fraction={s['device_busy_fraction']:.2f}  "
+              f"cancelled={s['counters']['cancelled']} "
+              f"deadline-expired={s['counters']['deadline_expired']}")
         pk = s["paged_kernel"]
         print(f"[launch.serve] decode path={pk['path']}  KV bytes/token: "
               f"fused={pk['kv_bytes_per_token_fused']:.0f} "
@@ -374,6 +408,45 @@ def main():
             if args.trace_timeline:
                 print(obs.format_timeline(tracer,
                                           max_rows=args.trace_timeline))
+
+
+def _run_async_demo(eng, prompts, args):
+    """Serve ``prompts`` through :class:`AsyncServeFrontend`: one
+    submitting coroutine per request next to the engine loop, every
+    token consumed from its handle's async stream, and (with
+    ``--deadline-ms``) a deadline on every third request so expiry and
+    block release are exercised under real concurrency."""
+    import asyncio
+
+    from repro.serve import AsyncServeFrontend
+
+    fe = AsyncServeFrontend(eng, max_queue=max(8, 2 * len(prompts)))
+
+    async def client(i, prompt):
+        dl = args.deadline_ms if args.deadline_ms and i % 3 == 2 else None
+        h = await fe.submit(prompt, max_new_tokens=args.max_new,
+                            deadline_ms=dl)
+        async for tok in h:
+            if args.stream:
+                print(f"  [stream] req {h.uid} +tok {tok}")
+        return await h.wait()
+
+    async def run():
+        loop = asyncio.ensure_future(fe.serve_forever())
+        try:
+            done = await asyncio.gather(
+                *(client(i, p) for i, p in enumerate(prompts)))
+        finally:
+            fe.close()
+            await loop
+        return done
+
+    done = asyncio.run(run())
+    expired = [r.uid for r in done if r.error == "deadline"]
+    if expired:
+        print(f"[launch.serve] deadline expired: "
+              f"{len(expired)} requests {expired}")
+    return done
 
 
 if __name__ == "__main__":

@@ -309,6 +309,19 @@ class Model:
                                backend=cfg.backend_preference)[:, 0, : cfg.vocab_size]
         return logits, cache
 
+    def decode_and_sample(self, params, tokens, cache, pos, keys,
+                          temperature, top_k):
+        """Fused decode + on-device sampling: one decode step followed by
+        :func:`sample_tokens`, so only the sampled token ids (int32 [B])
+        ever cross the host boundary — the async serving engine jits this
+        instead of ``decode_step`` and defers the host sync by a full
+        tick.  ``keys`` are per-row uint32 [B, 2] PRNG keys; rows with
+        ``temperature <= 0`` ignore their key (greedy argmax).  Returns
+        (token ids int32 [B], cache).
+        """
+        logits, cache = self.decode_step(params, tokens, cache, pos)
+        return sample_tokens(logits, keys, temperature, top_k), cache
+
     def decode_step(self, params, tokens, cache, pos):
         """One decode step. tokens: [B, 1]; pos: scalar or [B] absolute
         position of the new token. Returns (logits [B, V], cache)."""
@@ -328,3 +341,43 @@ class Model:
         logits = unembed_apply(params["embed"], x,
                                backend=cfg.backend_preference)[:, 0, : cfg.vocab_size]
         return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(logits, keys, temperature, top_k):
+    """Batched token sampling as a pure function of ``(logits, key)``.
+
+    Per row: ``temperature <= 0`` is greedy argmax (ties break to the
+    lowest index, matching ``np.argmax``); otherwise logits outside the
+    ``top_k`` largest (``top_k <= 0`` means no truncation) are masked to
+    ``-inf``, the rest are divided by the temperature and sampled via
+    ``jax.random.categorical`` under a per-row key.  Because the result
+    depends only on the row's logits and key — never on batch position
+    or previous draws — the synchronous host-side sampler and the async
+    fused :meth:`Model.decode_and_sample` path produce bit-identical
+    tokens for the same request state, which is what the engine's
+    sync==async equivalence tests assert.
+
+    logits: [B, V] float; keys: uint32 [B, 2] (raw key data, one per
+    row); temperature: float [B]; top_k: int32 [B].  Returns int32 [B].
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jnp.asarray(top_k, jnp.int32)
+    kk = jnp.clip(jnp.where(k <= 0, v, k), 1, v)
+    # top-k threshold: the k-th largest logit per row; everything below
+    # it leaves the candidate set (ties AT the threshold all stay in,
+    # which keeps the mask a pure function of the logit values)
+    order = jnp.sort(logits, axis=-1)[:, ::-1]
+    thresh = jnp.take_along_axis(order, (kk - 1)[:, None], axis=-1)
+    masked = jnp.where(logits < thresh, -jnp.inf, logits)
+    temp = jnp.asarray(temperature, jnp.float32)
+    scaled = masked / jnp.maximum(temp, 1e-6)[:, None]
+    keys = jnp.asarray(keys, jnp.uint32)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)

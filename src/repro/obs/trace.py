@@ -24,6 +24,16 @@ sample, preempt, evict, kernel) or ``"req/<uid>"`` for per-request
 timelines.  ``obs/export.py`` maps tracks onto Chrome trace-event
 process/thread lanes.
 
+Double-buffered ticks (``PagedServeEngine.step_async``) interleave the
+lanes on purpose: tick N's ``decode_dispatch`` span (``engine/decode``,
+``mode="async"``) precedes tick N-1's ``device_sync`` span inside the
+same ``tick`` span — the overlap the async host loop exists for is
+directly visible as that ordering.  Sync spans carry ``sync_tick`` (the
+tick whose tokens they wait for) and token instants on ``req/<uid>``
+tracks consequently land one tick after their ``decode_dispatch``; the
+tick-top deadline sweep and cancellations add ``deadline`` / ``fail``
+instants on the request track.
+
 The module-level *active tracer* is how code that cannot be handed a
 tracer instance (the ``tune.dispatch`` config resolver, called from
 deep inside op wrappers) still records: engines ``set_active`` their
@@ -51,6 +61,40 @@ ENGINE_TRACKS = (
 def req_track(uid) -> str:
     """The per-request track name for a request uid."""
     return f"req/{uid}"
+
+
+class _Span:
+    """Class-based context manager for :meth:`Tracer.span` — spans are
+    the tracer's hottest path (several per engine tick) and a generator
+    contextmanager costs ~3x more per entry than this slotted object,
+    which matters for the <= 5% trace-overhead budget the serving bench
+    enforces."""
+
+    __slots__ = ("tr", "name", "track", "cat", "args", "t0", "bridge")
+
+    def __init__(self, tr, name, track, cat, args):
+        self.tr = tr
+        self.name = name
+        self.track = track
+        self.cat = cat
+        self.args = args
+        self.bridge = None
+
+    def __enter__(self):
+        tr = self.tr
+        if tr._annotation is not None:
+            self.bridge = tr._annotation(self.name)
+            self.bridge.__enter__()
+        self.t0 = tr.now_us()
+        return tr
+
+    def __exit__(self, *exc):
+        tr = self.tr
+        tr.emit(self.name, "X", self.t0, self.track, self.cat,
+                dur=tr.now_us() - self.t0, args=self.args)
+        if self.bridge is not None:
+            self.bridge.__exit__(*exc)
+        return False
 
 
 class Tracer:
@@ -104,19 +148,10 @@ class Tracer:
                 cat: str = "engine", **args) -> None:
         self.emit(name, "i", self.now_us(), track, cat, args=args)
 
-    @contextmanager
     def span(self, name: str, *, track: str = "engine/tick",
-             cat: str = "engine", **args):
+             cat: str = "engine", **args) -> "_Span":
         """Record a complete span (``ph == "X"``) around the body."""
-        bridge = (self._annotation(name) if self._annotation is not None
-                  else nullcontext())
-        t0 = self.now_us()
-        try:
-            with bridge:
-                yield self
-        finally:
-            self.emit(name, "X", t0, track, cat, dur=self.now_us() - t0,
-                      args=args)
+        return _Span(self, name, track, cat, args)
 
     # ------------------------------------------------------------------
     @property

@@ -1,5 +1,7 @@
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
-                                supports_paging)
+                                request_key, supports_paging)
+from repro.serve.frontend import (AsyncServeFrontend, FrontendClosedError,
+                                  QueueFullError, StreamHandle)
 from repro.serve.metrics import Histogram, ServeMetrics
 from repro.serve.paging import (BlockPool, PrefixCache, blocks_for,
                                 set_block_tables)

@@ -10,6 +10,20 @@ callbacks plus ``serve/metrics.py`` telemetry come for free.  Capacity
 is bounded by *actual tokens held*, not worst-case reservations — the
 whole point of paging.
 
+The engine has two tick modes sharing one scheduler and one cache:
+
+  * ``step()`` — synchronous: dispatch, block on the device, sample on
+    the host.  The reference semantics.
+  * ``step_async()`` — double-buffered: plan against *projected* state,
+    dispatch step N with sampling fused on-device
+    (:meth:`repro.models.Model.decode_and_sample`, so only token ids
+    ever cross the host boundary), then sync and emit step N-1's
+    tokens.  The host runs one step behind the device; the device queue
+    never drains while there is decode work.  Token-for-token (and
+    schedule-for-schedule) identical to ``step()`` under fixed seeds —
+    see ``docs/serving.md`` ("Async host loop") for the invariant
+    argument.
+
 ``ServeEngine`` keeps the contiguous fixed-slot design: every request
 reserves a full ``cache_len`` row.  It is the equivalence oracle for the
 paged engine (greedy outputs must match token-for-token) and still
@@ -35,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.models.model import sample_tokens
 from repro.obs import trace as obs_trace
 from repro.obs.trace import req_track
 from repro.serve.metrics import ServeMetrics
@@ -48,16 +63,65 @@ class Request:
     prompt: np.ndarray            # int32 [prompt_len]
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => no truncation (temperature > 0 only)
+    seed: Optional[int] = None    # per-request sampling seed (None: engine
+                                  # seed folded with uid — still deterministic)
+    deadline_s: Optional[float] = None   # absolute, on the engine's clock
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     on_token: Optional[Callable] = None   # streaming: fn(token, request)
-    error: Optional[str] = None           # "too_long" | "oom" | None
+    error: Optional[str] = None           # "too_long" | "oom" | "callback"
+                                          # | "deadline" | "cancelled" | None
 
 
 def _emit(req: Request, tok: int) -> None:
     req.out_tokens.append(int(tok))
-    if req.on_token is not None:
-        req.on_token(int(tok), req)
+    cb = req.on_token
+    if cb is None:
+        return
+    try:
+        cb(int(tok), req)
+    except Exception:
+        # a broken streaming consumer must fail ITS request, not wedge
+        # the tick (and every other in-flight stream) — the engine
+        # retires the request with error="callback" when it sees this
+        req.error = "callback"
+        req.on_token = None
+
+
+def request_key(req: Request, index: int, engine_seed: int):
+    """The PRNG key for a request's ``index``-th sampled token.
+
+    Derivation is a pure function of (seed-or-uid, index): explicit
+    ``req.seed`` wins, otherwise the engine seed folded with the uid, so
+    distinct requests never share a stream.  ``index`` counts tokens
+    sampled so far — preempt-by-recompute replays the same indices, so
+    a resumed request keeps drawing the same tokens, and the sync and
+    async samplers (which both receive this key as data) agree bit for
+    bit."""
+    if req.seed is not None:
+        base = jax.random.PRNGKey(req.seed)
+    else:
+        base = jax.random.fold_in(jax.random.PRNGKey(engine_seed), req.uid)
+    return jax.random.fold_in(base, index)
+
+
+def _sample_host(req: Request, logits_row: np.ndarray,
+                 engine_seed: int) -> int:
+    """Synchronous host-side sampler.  Greedy stays a plain ``np.argmax``
+    (bit-identical to the device's ``jnp.argmax``, ties to the lowest
+    index); temperature/top-k route through the SAME
+    :func:`~repro.models.model.sample_tokens` the async fused path jits,
+    under the same :func:`request_key` — that identity is what the
+    sync==async equivalence tests lean on."""
+    if req.temperature <= 0:
+        return int(np.argmax(logits_row))
+    key = request_key(req, len(req.out_tokens), engine_seed)
+    tok = sample_tokens(jnp.asarray(logits_row)[None],
+                        jnp.asarray(key, jnp.uint32)[None],
+                        jnp.full((1,), req.temperature, jnp.float32),
+                        jnp.full((1,), req.top_k, jnp.int32))
+    return int(tok[0])
 
 
 def _pretune(model: Model, params, batch_sizes, verbose: bool = True):
@@ -87,6 +151,18 @@ def supports_paging(cfg) -> bool:
     return (not cfg.is_encdec and not cfg.sliding_window
             and all(cfg.layer_kind(i) == "attn"
                     for i in range(cfg.n_layers)))
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unsynced async step: the device-resident
+    sampled token vector plus the host bookkeeping needed to emit it
+    next tick."""
+    tokens: object                 # device int32 [max_batch]
+    emits: list                    # [(SeqState, row)] in sampling order
+    row_of: dict                   # uid -> row, for next tick's decode input
+    t_dispatch: float              # engine-clock time of dispatch
+    tick: int
 
 
 # ---------------------------------------------------------------------------
@@ -138,7 +214,10 @@ class PagedServeEngine:
     sync and sampling on engine-phase tracks, plus a per-request track
     from submit to retire — exportable as Chrome trace-event JSON via
     ``repro.obs.save_chrome`` (see ``docs/observability.md``).  Off by
-    default; the hooks run against a no-op ``NullTracer``.
+    default; the hooks run against a no-op ``NullTracer``.  Under
+    ``step_async`` the overlap is directly visible: tick N's
+    ``decode_dispatch`` span precedes tick N-1's ``device_sync`` span
+    inside the same ``tick`` span.
     """
 
     def __init__(self, model: Model, params, *, num_blocks: int = 64,
@@ -195,21 +274,28 @@ class PagedServeEngine:
                                max_seq_len=max_seq_len,
                                prefix_cache=self.prefix,
                                tracer=self.trace)
+        self.clock = clock
         self.metrics = ServeMetrics(clock)
         self.tables = np.full((max_batch, self.max_blocks_per_seq), -1,
                               np.int32)
+        self.rng_seed = rng_seed
         self.rng = np.random.default_rng(rng_seed)
+        self._key_cache: dict = {}          # uid -> base PRNG key
+        self._inflight: Optional[_InFlight] = None
+        self._row_sh = None                 # token-row sharding when meshed
         if mesh is not None:
             self._build_sharded(num_blocks, shard_rules)
         else:
             self._attn_scope = _null_scope
             self._decode = jax.jit(model.decode_step)
+            self._decode_sample = jax.jit(model.decode_and_sample)
             self._prefill_chunk = jax.jit(model.prefill_chunk)
+        self._sample_only = jax.jit(sample_tokens)
         self.ticks = 0
         self.finished: list = []
 
     def _build_sharded(self, num_blocks: int, shard_rules) -> None:
-        """Shard params + KV pool over the mesh and re-jit the two device
+        """Shard params + KV pool over the mesh and re-jit the device
         entry points with explicit in/out shardings."""
         import functools
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -226,15 +312,25 @@ class PagedServeEngine:
         self.cache = jax.device_put(self.cache, c_sh)
         rep = NamedSharding(mesh, P())
         dax = "data" if self._shard_batch else None
+        row_sh = NamedSharding(mesh, P(dax, None))
+        vec_sh = NamedSharding(mesh, P(dax))
+        self._row_sh = row_sh
         self._attn_scope = functools.partial(
             attn.paged_shard_scope, mesh, tp=self._tp,
             shard_batch=self._shard_batch)
-        # logits come back replicated: the engine samples on the host
-        # every tick, so any vocab sharding would be gathered anyway
+        # logits come back replicated: the sync engine samples on the
+        # host every tick, so any vocab sharding would be gathered anyway
         self._decode = jax.jit(
             model.decode_step,
-            in_shardings=(p_sh, NamedSharding(mesh, P(dax, None)), c_sh,
-                          NamedSharding(mesh, P(dax))),
+            in_shardings=(p_sh, row_sh, c_sh, vec_sh),
+            out_shardings=(rep, c_sh))
+        # fused decode+sample: keys/temperature/top_k ride the batch rows
+        # exactly like tokens/pos; the sampled id vector (a few bytes)
+        # comes back replicated — it IS the host boundary now
+        self._decode_sample = jax.jit(
+            model.decode_and_sample,
+            in_shardings=(p_sh, row_sh, c_sh, vec_sh, row_sh, vec_sh,
+                          vec_sh),
             out_shardings=(rep, c_sh))
         self._prefill_chunk = jax.jit(
             model.prefill_chunk,
@@ -265,21 +361,77 @@ class PagedServeEngine:
         for seq in self.sched.running:
             self.tables[seq.row, :len(seq.table)] = seq.table
 
+    def _finalize_detached(self, req: Request) -> None:
+        """Complete/fail a request whose blocks and row are already
+        released (normal retire, async retire-at-dispatch, or a
+        cancelled waiting request)."""
+        req.done = True
+        self.finished.append(req)
+        self._key_cache.pop(req.uid, None)
+        if req.error:                     # e.g. "oom": truncated output
+            self.metrics.on_fail(req.uid, req.error)
+            self.trace.instant("fail", track=req_track(req.uid),
+                               cat="request", uid=req.uid,
+                               error=req.error)
+        else:
+            self.metrics.on_complete(req.uid)
+            self.trace.instant("complete", track=req_track(req.uid),
+                               cat="request", uid=req.uid,
+                               tokens=len(req.out_tokens))
+
     def _retire(self, seq) -> None:
         self.sched.finish(seq)
-        seq.req.done = True
-        self.finished.append(seq.req)
-        if seq.req.error:                     # e.g. "oom": truncated output
-            self.metrics.on_fail(seq.req.uid)
-            self.trace.instant("fail", track=req_track(seq.req.uid),
-                               cat="request", uid=seq.req.uid,
-                               error=seq.req.error)
-        else:
-            self.metrics.on_complete(seq.req.uid)
-            self.trace.instant("complete", track=req_track(seq.req.uid),
-                               cat="request", uid=seq.req.uid,
-                               tokens=len(seq.req.out_tokens))
+        self._finalize_detached(seq.req)
 
+    def _fail_detached(self, req: Request, error: str) -> None:
+        req.error = req.error or error
+        self._finalize_detached(req)
+
+    # ------------------------------------------------------------------
+    def cancel(self, req: Request, error: str = "cancelled") -> bool:
+        """Cancel a request wherever it currently lives — waiting queue,
+        running (frees its pool blocks and batch row; prefix-cache
+        references survive by design, the cache holds its own refs), or
+        sampled-but-unsynced in the async in-flight step (its token is
+        dropped at emission).  Returns False if it already finished."""
+        if req.done:
+            return False
+        if req in self.sched.waiting:
+            self.sched.waiting.remove(req)
+            self._fail_detached(req, error)
+            return True
+        for seq in self.sched.running:
+            if seq.req is req:
+                req.error = error
+                self._retire(seq)
+                return True
+        # neither waiting nor running nor done: an async retiring seq
+        # whose final tokens are still in flight — blocks/row are
+        # already free, so only the bookkeeping remains
+        self._fail_detached(req, error)
+        return True
+
+    def _check_deadlines(self) -> None:
+        """Expire requests whose deadline passed, waiting or running.
+        Runs at the top of every tick (both modes) on the engine clock;
+        an expired running request frees its blocks immediately."""
+        now = self.clock()
+        expired_w = [r for r in self.sched.waiting
+                     if r.deadline_s is not None and now >= r.deadline_s]
+        for req in expired_w:
+            self.sched.waiting.remove(req)
+            self.trace.instant("deadline", track=req_track(req.uid),
+                               cat="request", uid=req.uid)
+            self._fail_detached(req, "deadline")
+        for seq in [s for s in self.sched.running
+                    if s.req.deadline_s is not None
+                    and now >= s.req.deadline_s]:
+            seq.req.error = "deadline"
+            self.trace.instant("deadline", track=req_track(seq.uid),
+                               cat="request", uid=seq.uid)
+            self._retire(seq)
+
+    # ------------------------------------------------------------------
     def _decode_kv_bytes(self, decode) -> tuple:
         """Analytic per-step KV traffic of both decode paths (bytes).
 
@@ -298,6 +450,19 @@ class PagedServeEngine:
             * per_layer * layers
         return fused, gathered
 
+    def _request_key(self, req: Request, index: int):
+        """Memoized :func:`request_key` (the base key is two fold-ins
+        that would otherwise re-run per token on the host hot path)."""
+        base = self._key_cache.get(req.uid)
+        if base is None:
+            if req.seed is not None:
+                base = jax.random.PRNGKey(req.seed)
+            else:
+                base = jax.random.fold_in(
+                    jax.random.PRNGKey(self.rng_seed), req.uid)
+            self._key_cache[req.uid] = base
+        return jax.random.fold_in(base, index)
+
     def _emit_token(self, seq, tok: int) -> None:
         _emit(seq.req, tok)
         self.metrics.on_token(seq.req.uid)
@@ -305,6 +470,11 @@ class PagedServeEngine:
             "first_token" if len(seq.req.out_tokens) == 1 else "token",
             track=req_track(seq.req.uid), cat="request", uid=seq.req.uid,
             pos=seq.kv_len)
+        if seq.req.error == "callback":
+            # the raising consumer poisoned only itself: retire this
+            # request failed and keep every other stream ticking
+            self._retire(seq)
+            return
         # retire at the TOKEN bound, not the block-rounded capacity:
         # when max_seq_len is not a multiple of block_size the last
         # block has slack that must never be decoded into (positions
@@ -314,17 +484,10 @@ class PagedServeEngine:
             self._retire(seq)
 
     # ------------------------------------------------------------------
-    def step(self) -> None:
-        """One tick: plan (admit / top-up / preempt), then run one decode
-        batch and at most one prefill chunk."""
-        self.trace.tick = self.ticks
-        with self.trace.span("tick", track="engine/tick",
-                             free_blocks=self.pool.free_blocks,
-                             running=len(self.sched.running),
-                             waiting=len(self.sched.waiting)):
-            self._step_traced()
-
-    def _step_traced(self) -> None:
+    def _plan_and_apply(self):
+        """Shared tick head: deadline sweep, scheduler plan, plan-event
+        metrics/tracing, table sync, prefix write-safety asserts."""
+        self._check_deadlines()
         with self.trace.span("admission", track="engine/admission"):
             plan = self.sched.plan_tick()
         # metrics identity: a sequence preempted in the same tick it was
@@ -373,74 +536,17 @@ class PagedServeEngine:
                 for blk in pf.seq.table[lo:hi + 1]:
                     assert self.pool.writable(blk, pf.seq.uid), \
                         f"prefill would write shared block {blk}"
+        return plan
 
-        if plan.decode:
-            tables = self.tables.copy()
-            rows = {seq.row for seq in plan.decode}
-            for r in range(self.max_batch):
-                if r not in rows:
-                    tables[r] = -1       # idle rows write to the trash block
-            tokens = np.zeros((self.max_batch, 1), np.int32)
-            posv = np.zeros(self.max_batch, np.int32)
-            for seq in plan.decode:
-                # during decode len(tokens) == kv_len + 1, so the pending
-                # input is always the last sampled token (seq.tokens would
-                # rebuild the whole prompt+output list every tick)
-                tokens[seq.row, 0] = seq.req.out_tokens[-1]
-                posv[seq.row] = seq.kv_len
-            cache = set_block_tables(self.cache, tables)
-            with self.trace.span("decode_dispatch", track="engine/decode",
-                                 rows=len(plan.decode),
-                                 path=self.decode_path,
-                                 uids=[s.uid for s in plan.decode]):
-                with self._attn_scope():
-                    logits, self.cache = self._decode(
-                        self.params, jnp.asarray(tokens), cache,
-                        jnp.asarray(posv))
-            # the host blocks HERE, not at dispatch: np.asarray forces
-            # the device computation (the async-host-loop roadmap item
-            # will hide exactly this span)
-            with self.trace.span("device_sync", track="engine/sync",
-                                 rows=len(plan.decode)):
-                logits = np.asarray(logits)
-            fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
-            self.metrics.on_decode_step(len(plan.decode), fused_b,
-                                        gathered_b, self.decode_path)
-            with self.trace.span("sample", track="engine/sample",
-                                 rows=len(plan.decode)):
-                for seq in plan.decode:
-                    seq.kv_len += 1
-                    tok = _sample(logits[seq.row], seq.req.temperature,
-                                  self.rng)
-                    self._emit_token(seq, tok)
+    def _masked_tables(self, decode) -> np.ndarray:
+        tables = self.tables.copy()
+        rows = {seq.row for seq in decode}
+        for r in range(self.max_batch):
+            if r not in rows:
+                tables[r] = -1       # idle rows write to the trash block
+        return tables
 
-        if plan.prefill is not None:
-            seq, start = plan.prefill.seq, plan.prefill.start
-            clen = plan.prefill.length
-            bucket = self.sched.bucket(clen)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :clen] = seq.tokens[start:start + clen]
-            cache = set_block_tables(self.cache,
-                                     self.tables[seq.row:seq.row + 1])
-            with self.trace.span("prefill_chunk", track="engine/prefill",
-                                 uid=seq.uid, start=start, length=clen,
-                                 bucket=bucket):
-                with self._attn_scope():
-                    logits, self.cache = self._prefill_chunk(
-                        self.params, {"tokens": jnp.asarray(toks)}, cache,
-                        jnp.int32(start), jnp.int32(clen - 1))
-            self.trace.instant("prefill_chunk", track=req_track(seq.uid),
-                               cat="request", uid=seq.uid, start=start,
-                               length=clen)
-            self.metrics.on_prefill_chunk()
-            seq.kv_len += clen
-            if seq.kv_len >= seq.prefill_target:
-                with self.trace.span("sample", track="engine/sample",
-                                     rows=1):
-                    tok = _sample(np.asarray(logits)[0],
-                                  seq.req.temperature, self.rng)
-                    self._emit_token(seq, tok)
-
+    def _tick_metrics(self) -> None:
         self.ticks += 1
         if self.prefix is not None:
             self.metrics.on_tick(
@@ -454,24 +560,306 @@ class PagedServeEngine:
             self.metrics.on_tick(self.pool.occupancy(), self.sched.active)
 
     # ------------------------------------------------------------------
+    # synchronous tick
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One synchronous tick: plan (admit / top-up / preempt), then
+        run one decode batch and at most one prefill chunk, blocking on
+        the device and sampling on the host.  Any async in-flight step
+        is flushed first, so the two modes can interleave safely."""
+        self.flush()
+        self.trace.tick = self.ticks
+        with self.trace.span("tick", track="engine/tick",
+                             free_blocks=self.pool.free_blocks,
+                             running=len(self.sched.running),
+                             waiting=len(self.sched.waiting)):
+            self._step_traced()
+
+    def _step_traced(self) -> None:
+        plan = self._plan_and_apply()
+
+        if plan.decode:
+            tables = self._masked_tables(plan.decode)
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            posv = np.zeros(self.max_batch, np.int32)
+            for seq in plan.decode:
+                # during decode len(tokens) == kv_len + 1, so the pending
+                # input is always the last sampled token (seq.tokens would
+                # rebuild the whole prompt+output list every tick)
+                tokens[seq.row, 0] = seq.req.out_tokens[-1]
+                posv[seq.row] = seq.kv_len
+            cache = set_block_tables(self.cache, tables)
+            t_disp = self.clock()
+            with self.trace.span("decode_dispatch", track="engine/decode",
+                                 rows=len(plan.decode),
+                                 path=self.decode_path,
+                                 uids=[s.uid for s in plan.decode]):
+                with self._attn_scope():
+                    logits, self.cache = self._decode(
+                        self.params, jnp.asarray(tokens), cache,
+                        jnp.asarray(posv))
+            # the host blocks HERE, not at dispatch: np.asarray forces
+            # the device computation (step_async hides exactly this span
+            # behind the next tick's planning and dispatch)
+            with self.trace.span("device_sync", track="engine/sync",
+                                 rows=len(plan.decode)):
+                logits = np.asarray(logits)
+            self.metrics.on_device_interval(t_disp, self.clock())
+            fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
+            self.metrics.on_decode_step(len(plan.decode), fused_b,
+                                        gathered_b, self.decode_path)
+            with self.trace.span("sample", track="engine/sample",
+                                 rows=len(plan.decode)):
+                for seq in plan.decode:
+                    seq.kv_len += 1
+                    tok = _sample_host(seq.req, logits[seq.row],
+                                       self.rng_seed)
+                    self._emit_token(seq, tok)
+
+        if plan.prefill is not None:
+            logits, seq = self._dispatch_prefill(plan.prefill)
+            if seq.kv_len >= seq.prefill_target:
+                with self.trace.span("sample", track="engine/sample",
+                                     rows=1):
+                    tok = _sample_host(seq.req, np.asarray(logits)[0],
+                                       self.rng_seed)
+                    self._emit_token(seq, tok)
+
+        self._tick_metrics()
+
+    def _dispatch_prefill(self, pf):
+        """Dispatch one prefill chunk (shared by both tick modes);
+        advances ``kv_len`` and returns (device logits [1, V], seq)."""
+        seq, start, clen = pf.seq, pf.start, pf.length
+        bucket = self.sched.bucket(clen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :clen] = seq.tokens[start:start + clen]
+        cache = set_block_tables(self.cache,
+                                 self.tables[seq.row:seq.row + 1])
+        with self.trace.span("prefill_chunk", track="engine/prefill",
+                             uid=seq.uid, start=start, length=clen,
+                             bucket=bucket):
+            with self._attn_scope():
+                logits, self.cache = self._prefill_chunk(
+                    self.params, {"tokens": jnp.asarray(toks)}, cache,
+                    jnp.int32(start), jnp.int32(clen - 1))
+        self.trace.instant("prefill_chunk", track=req_track(seq.uid),
+                           cat="request", uid=seq.uid, start=start,
+                           length=clen)
+        self.metrics.on_prefill_chunk()
+        seq.kv_len += clen
+        return logits, seq
+
+    # ------------------------------------------------------------------
+    # double-buffered async tick
+    # ------------------------------------------------------------------
+    def step_async(self) -> None:
+        """One double-buffered tick: plan against *projected* occupancy
+        (``kv_len``/``inflight`` advance at dispatch), dispatch step N
+        with sampling fused on-device, THEN sync and emit step N-1's
+        token ids.  The host runs one step behind the device; dispatch
+        order on the device is preserved by the cache data dependency
+        (tick N's compute consumes tick N-1's cache output), which is
+        what makes freeing blocks at dispatch safe — the device has, in
+        program order, already read them."""
+        self.trace.tick = self.ticks
+        with self.trace.span("tick", track="engine/tick", mode="async",
+                             free_blocks=self.pool.free_blocks,
+                             running=len(self.sched.running),
+                             waiting=len(self.sched.waiting),
+                             inflight=self._inflight is not None):
+            self._step_async_traced()
+
+    def _step_async_traced(self) -> None:
+        prev, self._inflight = self._inflight, None
+        plan = self._plan_and_apply()
+        cur_tokens = None            # device int32 [max_batch]
+        emits: list = []
+
+        if plan.decode:
+            tables = self._masked_tables(plan.decode)
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            posv = np.zeros(self.max_batch, np.int32)
+            keys = np.zeros((self.max_batch, 2), np.uint32)
+            temps = np.zeros(self.max_batch, np.float32)
+            topks = np.zeros(self.max_batch, np.int32)
+            dev_rows = []
+            for seq in plan.decode:
+                posv[seq.row] = seq.kv_len
+                if prev is not None and seq.uid in prev.row_of:
+                    # input token is still on the device (sampled last
+                    # tick, not yet emitted); rows are stable while a
+                    # seq stays running, so gather from the same row
+                    assert prev.row_of[seq.uid] == seq.row
+                    dev_rows.append(seq.row)
+                else:
+                    tokens[seq.row, 0] = seq.req.out_tokens[-1]
+                if seq.req.temperature > 0:
+                    idx = len(seq.req.out_tokens) + seq.inflight
+                    keys[seq.row] = np.asarray(
+                        self._request_key(seq.req, idx))
+                temps[seq.row] = seq.req.temperature
+                topks[seq.row] = seq.req.top_k
+            inp = jnp.asarray(tokens)
+            if dev_rows:
+                r = np.asarray(dev_rows)
+                inp = inp.at[r, 0].set(prev.tokens[r])
+                if self._row_sh is not None:
+                    # gathering from the replicated in-flight vector
+                    # commits inp replicated; re-place to the declared
+                    # per-row sharding before the pjit call
+                    inp = jax.device_put(inp, self._row_sh)
+            cache = set_block_tables(self.cache, tables)
+            t_disp = self.clock()
+            with self.trace.span("decode_dispatch", track="engine/decode",
+                                 rows=len(plan.decode), mode="async",
+                                 path=self.decode_path,
+                                 uids=[s.uid for s in plan.decode]):
+                with self._attn_scope():
+                    cur_tokens, self.cache = self._decode_sample(
+                        self.params, inp, cache, jnp.asarray(posv),
+                        jnp.asarray(keys), jnp.asarray(temps),
+                        jnp.asarray(topks))
+            fused_b, gathered_b = self._decode_kv_bytes(plan.decode)
+            self.metrics.on_decode_step(len(plan.decode), fused_b,
+                                        gathered_b, self.decode_path)
+            for seq in plan.decode:
+                seq.kv_len += 1
+                seq.inflight += 1
+                emits.append((seq, seq.row))
+                self._maybe_finish_async(seq)
+
+        if plan.prefill is not None:
+            logits, seq = self._dispatch_prefill(plan.prefill)
+            if seq.kv_len >= seq.prefill_target:
+                with self.trace.span("sample", track="engine/sample",
+                                     rows=1, mode="async"):
+                    idx = len(seq.req.out_tokens) + seq.inflight
+                    key = (np.asarray(self._request_key(seq.req, idx))
+                           if seq.req.temperature > 0
+                           else np.zeros(2, np.uint32))
+                    tok = self._sample_only(
+                        logits,
+                        jnp.asarray(key, jnp.uint32)[None],
+                        jnp.full((1,), seq.req.temperature, jnp.float32),
+                        jnp.full((1,), seq.req.top_k, jnp.int32))[0]
+                if cur_tokens is None:
+                    cur_tokens = jnp.zeros(self.max_batch, jnp.int32)
+                cur_tokens = cur_tokens.at[seq.row].set(tok)
+                seq.inflight += 1
+                emits.append((seq, seq.row))
+                self._maybe_finish_async(seq)
+
+        # sync (and emit) the PREVIOUS tick only after this tick's work
+        # is in the device queue — that ordering is the whole overlap
+        self._sync_prev(prev)
+        if emits:
+            t_disp = t_disp if plan.decode else self.clock()
+            self._inflight = _InFlight(
+                tokens=cur_tokens, emits=emits,
+                row_of={s.uid: row for s, row in emits},
+                t_dispatch=t_disp, tick=self.ticks)
+        self._tick_metrics()
+
+    def _maybe_finish_async(self, seq) -> None:
+        """Retire-at-dispatch: when the just-dispatched token is the
+        request's last (by count — the retire decision never needs the
+        token's value), release the row and blocks NOW so next tick's
+        admission sees them; ``done``/completion metrics wait for the
+        final emission (streaming order is preserved)."""
+        if len(seq.req.out_tokens) + seq.inflight \
+                >= seq.req.max_new_tokens \
+                or seq.kv_len + 1 >= self.max_seq_len:
+            seq.retiring = True
+            self.sched.finish(seq)
+
+    def _sync_prev(self, prev: Optional[_InFlight]) -> None:
+        """Block on the previous async step and emit its tokens."""
+        if prev is None:
+            return
+        with self.trace.span("device_sync", track="engine/sync",
+                             rows=len(prev.emits), sync_tick=prev.tick):
+            toks = np.asarray(prev.tokens)
+        self.metrics.on_device_interval(prev.t_dispatch, self.clock())
+        with self.trace.span("emit", track="engine/sample",
+                             rows=len(prev.emits)):
+            for seq, row in prev.emits:
+                self._emit_async(seq, int(toks[row]))
+
+    def _emit_async(self, seq, tok: int) -> None:
+        """Emit one step-N-1 token for ``seq``, which by now may be
+        running, retiring (finished at dispatch), or preempted (its
+        request re-queued; the token still belongs to the stream and
+        re-admission folds it into the recompute prefix).  A request
+        cancelled/expired while its token was in flight drops it."""
+        seq.inflight -= 1
+        req = seq.req
+        if req.done:
+            return
+        _emit(req, tok)
+        self.metrics.on_token(req.uid)
+        self.trace.instant(
+            "first_token" if len(req.out_tokens) == 1 else "token",
+            track=req_track(req.uid), cat="request", uid=req.uid,
+            pos=seq.kv_len)
+        if req.error == "callback":
+            if seq in self.sched.running:
+                self._retire(seq)
+            elif req in self.sched.waiting:      # preempted victim
+                self.sched.waiting.remove(req)
+                self._fail_detached(req, "callback")
+            else:                                # retiring: already freed
+                self._fail_detached(req, "callback")
+            return
+        if seq.retiring and seq.inflight == 0:
+            # the count-based retire decision was taken at dispatch;
+            # a preempted seq can never complete here (its final token
+            # would have flipped it to retiring instead)
+            self._finalize_detached(req)
+
+    def flush(self) -> None:
+        """Sync and emit any in-flight async step without dispatching
+        new work (drain point for the frontend and for mode mixing)."""
+        prev, self._inflight = self._inflight, None
+        self._sync_prev(prev)
+
+    @property
+    def has_inflight(self) -> bool:
+        return self._inflight is not None
+
+    # ------------------------------------------------------------------
+    def _drain_tick_budget(self) -> None:
+        """Tick budget exhausted: drain waiting/running requests as
+        errored so callers polling ``req.done`` never hang, and so the
+        pool's books balance (running seqs free their blocks)."""
+        for seq in list(self.sched.running):
+            seq.req.error = "tick_budget"
+            self._retire(seq)
+        while self.sched.waiting:
+            req = self.sched.waiting.popleft()
+            self._fail_detached(req, "tick_budget")
+
     def run(self, requests: list, max_ticks: int = 1000) -> list:
         for req in requests:
             self.submit(req)
         while self.sched.has_work() and self.ticks < max_ticks:
             self.step()
         if self.sched.has_work():
-            # tick budget exhausted: drain waiting/running requests as
-            # errored so callers polling ``req.done`` never hang, and so
-            # the pool's books balance (running seqs free their blocks)
-            for seq in list(self.sched.running):
-                seq.req.error = "tick_budget"
-                self._retire(seq)
-            while self.sched.waiting:
-                req = self.sched.waiting.popleft()
-                req.error = "tick_budget"
-                req.done = True
-                self.metrics.on_fail(req.uid)
-                self.finished.append(req)
+            self._drain_tick_budget()
+        return self.finished
+
+    def run_async(self, requests: list, max_ticks: int = 1000) -> list:
+        """Drain a batch through the double-buffered tick (the asyncio
+        frontend drives ``step_async`` itself; this mirrors :meth:`run`
+        for benches and equivalence tests)."""
+        for req in requests:
+            self.submit(req)
+        while (self.sched.has_work() or self._inflight is not None) \
+                and self.ticks < max_ticks:
+            self.step_async()
+        self.flush()
+        if self.sched.has_work():
+            self._drain_tick_budget()
         return self.finished
 
 
@@ -504,6 +892,7 @@ class ServeEngine:
         self.cache = model.init_cache(slots, cache_len)
         self.slot_req: list = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
+        self.rng_seed = rng_seed
         self.rng = np.random.default_rng(rng_seed)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
@@ -546,11 +935,12 @@ class ServeEngine:
             self.params, {"tokens": jnp.asarray(toks)}, small,
             jnp.int32(plen - bucket))
         self.cache = _splice_cache(self.cache, small, slot)
-        first = _sample(np.asarray(logits)[0], req.temperature, self.rng)
+        first = _sample_host(req, np.asarray(logits)[0], self.rng_seed)
         _emit(req, first)
-        if len(req.out_tokens) >= req.max_new_tokens:
-            req.done = True                   # one-token request: slot stays free
-            return True
+        if req.error == "callback" \
+                or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True                   # done (or its consumer broke):
+            return True                       # slot stays free
         self.slot_req[slot] = req
         self.slot_pos[slot] = plen
         return True
@@ -572,10 +962,11 @@ class ServeEngine:
         retired = []
         for i in active:
             req = self.slot_req[i]
-            tok = _sample(logits[i], req.temperature, self.rng)
+            tok = _sample_host(req, logits[i], self.rng_seed)
             _emit(req, tok)
             self.slot_pos[i] += 1
-            if len(req.out_tokens) >= req.max_new_tokens \
+            if req.error == "callback" \
+                    or len(req.out_tokens) >= req.max_new_tokens \
                     or self.slot_pos[i] >= self.cache_len - 1:
                 req.done = True
                 retired.append(req)
@@ -598,14 +989,6 @@ class ServeEngine:
                     done.append(req)
             done.extend(self.tick())
         return done
-
-
-def _sample(logits: np.ndarray, temperature: float, rng) -> int:
-    if temperature <= 0:
-        return int(np.argmax(logits))
-    p = np.exp((logits - logits.max()) / temperature)
-    p /= p.sum()
-    return int(rng.choice(len(p), p=p))
 
 
 def _splice_cache(big, small, slot: int):

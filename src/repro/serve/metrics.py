@@ -82,8 +82,10 @@ class ServeMetrics:
         self.clock = clock
         self.ttft = Histogram()
         self.per_token = Histogram()
+        self.queue_delay = Histogram()
         self.counters = {"submitted": 0, "admitted": 0, "completed": 0,
                          "failed": 0, "preempted": 0, "rejected": 0,
+                         "cancelled": 0, "deadline_expired": 0,
                          "tokens_out": 0, "prefill_chunks": 0, "ticks": 0,
                          "decode_steps": 0, "decode_tokens": 0,
                          "kv_bytes_fused_est": 0, "kv_bytes_gathered_est": 0,
@@ -91,6 +93,11 @@ class ServeMetrics:
                          "prefix_queried_blocks": 0, "prefix_hit_blocks": 0,
                          "prefix_tokens_saved": 0, "prefix_cow_events": 0,
                          "prefix_cow_tokens": 0, "prefix_evictions": 0}
+        # device-busy accounting: dispatch->sync windows, union-merged so
+        # overlapping double-buffered steps never double-count
+        self._busy_time = 0.0
+        self._busy_until = float("-inf")
+        self._admitted_once: set = set()
         # decode steps per attention path: a single last-write string
         # would hide mixed fused/gather runs (e.g. a capability
         # negotiation change mid-run), so count per path and report both
@@ -113,8 +120,15 @@ class ServeMetrics:
 
     def on_admit(self, uid: int) -> None:
         self.counters["admitted"] += 1
+        now = self.clock()
         if self._t_first_admit is None:
-            self._t_first_admit = self.clock()
+            self._t_first_admit = now
+        # queue delay is submit -> FIRST admission (scheduling delay);
+        # preempt-recompute re-admissions would re-observe cumulative
+        # lifetimes and drown the signal
+        if uid not in self._admitted_once:
+            self._admitted_once.add(uid)
+            self.queue_delay.observe(now - self._t_submit.get(uid, now))
 
     def on_reject(self, uid: int) -> None:
         self.counters["rejected"] += 1
@@ -134,9 +148,28 @@ class ServeMetrics:
     def on_complete(self, uid: int) -> None:
         self.counters["completed"] += 1
 
-    def on_fail(self, uid: int) -> None:
-        """Retired with an error (e.g. pool OOM truncation)."""
+    def on_fail(self, uid: int, error: Optional[str] = None) -> None:
+        """Retired with an error (e.g. pool OOM truncation).  Client
+        cancellations and deadline expiries additionally bump their own
+        counters so load-shedding is visible separately from engine
+        faults."""
         self.counters["failed"] += 1
+        if error == "cancelled":
+            self.counters["cancelled"] += 1
+        elif error == "deadline":
+            self.counters["deadline_expired"] += 1
+
+    def on_device_interval(self, start: float, end: float) -> None:
+        """One dispatch->sync device window (engine clock).  Windows are
+        union-merged: under the double-buffered tick, step N's window
+        overlaps the host work of step N+1, and summing raw durations
+        would count busy time twice."""
+        if end <= start:
+            return
+        s = max(start, self._busy_until)
+        if end > s:
+            self._busy_time += end - s
+        self._busy_until = max(self._busy_until, end)
 
     def on_prefix_lookup(self, uid: int, queried_blocks: int,
                          hit_blocks: int, tokens_saved: int,
@@ -212,6 +245,18 @@ class ServeMetrics:
         dt = self.clock() - t0
         return self.counters["tokens_out"] / dt if dt > 0 else 0.0
 
+    def device_busy_fraction(self) -> float:
+        """Fraction of serving wall time (since first admission) covered
+        by a dispatched-but-unsynced decode step.  An *estimate of host-
+        side overlap*, not a device counter: prefill-only phases count
+        as idle on both tick modes, so the sync and async engines are
+        directly comparable — the async engine's whole point is pushing
+        this toward 1.0."""
+        if self._t_first_admit is None:
+            return 0.0
+        dt = self.clock() - self._t_first_admit
+        return min(1.0, self._busy_time / dt) if dt > 0 else 0.0
+
     def summary(self) -> Dict:
         occ = np.asarray(self.occupancy) if self.occupancy else np.zeros(1)
         act = np.asarray(self.active) if self.active else np.zeros(1)
@@ -222,7 +267,9 @@ class ServeMetrics:
             "counters": dict(self.counters),
             "ttft_s": self.ttft.summary(),
             "per_token_s": self.per_token.summary(),
+            "queue_delay_s": self.queue_delay.summary(),
             "throughput_tok_s": self.throughput(),
+            "device_busy_fraction": self.device_busy_fraction(),
             "occupancy": {"mean": float(occ.mean()),
                           "peak": float(occ.max())},
             "peak_active": int(act.max()),

@@ -68,6 +68,15 @@ class SeqState:
     A prefix-cache hit starts the sequence at ``kv_len ==
     shared_tokens`` with the adopted blocks already in ``table`` —
     those leading blocks are shared and must never be written.
+
+    Under the async engine ``kv_len`` is *projected*: it advances at
+    dispatch, one tick before the host sees the sampled token, and
+    ``inflight`` counts tokens sampled on-device but not yet emitted.
+    The scheduler itself needs no async awareness — planning against
+    projected state is exactly planning one tick ahead.  ``retiring``
+    marks a sequence whose blocks and row were already released at
+    dispatch (count-based retire) while its last tokens are still in
+    flight; completion bookkeeping happens at emission.
     """
     req: object                        # serve.engine.Request
     row: int
@@ -75,6 +84,8 @@ class SeqState:
     prefill_target: int
     kv_len: int = 0
     table: List[int] = dataclasses.field(default_factory=list)
+    inflight: int = 0                  # sampled on device, not yet emitted
+    retiring: bool = False             # freed at dispatch, awaiting emission
     # --- prefix-cache bookkeeping (all zero when the cache is off) ----
     shared_tokens: int = 0             # tokens adopted from the index
     prefix_queried: int = 0            # full prompt blocks probed

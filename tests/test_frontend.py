@@ -1,0 +1,240 @@
+"""Asyncio frontend lifecycle tests (``repro.serve.frontend``).
+
+No pytest-asyncio: every test is a plain sync function that drives its
+own event loop with ``asyncio.run`` — the frontend is single-threaded
+by design, so a loop per test is exact and hermetic.  Deadline tests
+inject a manually-advanced fake clock into the ENGINE (the frontend
+stamps deadlines on the engine clock), so expiry is deterministic and
+no test ever sleeps.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.serve import (AsyncServeFrontend, FrontendClosedError,
+                         PagedServeEngine, QueueFullError)
+
+RNG = jax.random.PRNGKey(0)
+
+
+class _ManualClock:
+    """Engine clock that only moves when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_reduced("opt_6_7b").replace(remat=False, dtype="float32",
+                                          capacity_factor=8.0)
+    m = Model(cfg)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        m.init(RNG))
+    return m, params
+
+
+def _engine(model_and_params, clock=None, **over):
+    m, params = model_and_params
+    kw = dict(num_blocks=16, block_size=8, max_batch=2, max_seq_len=64,
+              prefill_buckets=(16,))
+    kw.update(over)
+    if clock is not None:
+        kw["clock"] = clock
+    return PagedServeEngine(m, params, **kw)
+
+
+def _prompt(n, seed=0):
+    # 256 == the reduced configs' vocab size (any smaller bound works)
+    return np.random.default_rng(seed).integers(0, 256, (n,))
+
+
+def test_stream_yields_every_token_in_order(model_and_params):
+    """Async iteration over a handle delivers exactly the request's
+    out_tokens, in order, for greedy and seeded-sampling requests."""
+    eng = _engine(model_and_params)
+    fe = AsyncServeFrontend(eng)
+
+    async def go():
+        h1 = await fe.submit(_prompt(5), max_new_tokens=4)
+        h2 = await fe.submit(_prompt(9, seed=1), max_new_tokens=4,
+                             temperature=0.8, top_k=8, seed=7)
+
+        async def consume(h):
+            return [tok async for tok in h]
+
+        drain = asyncio.ensure_future(fe.drain())
+        t1, t2 = await asyncio.gather(consume(h1), consume(h2))
+        await drain
+        return h1, h2, t1, t2
+
+    h1, h2, t1, t2 = asyncio.run(go())
+    assert h1.done and h2.done and h1.error is None and h2.error is None
+    assert t1 == h1.out_tokens and len(t1) == 4
+    assert t2 == h2.out_tokens and len(t2) == 4
+    assert (await_result := h1.request).done    # wait() returned the req
+    assert await_result.uid == h1.uid
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+
+
+def test_bounded_queue_rejects_with_typed_error(model_and_params):
+    """The admission queue sheds load with QueueFullError (carrying the
+    bound) instead of buffering unboundedly; already-accepted requests
+    still complete."""
+    eng = _engine(model_and_params)
+    fe = AsyncServeFrontend(eng, max_queue=2)
+
+    async def go():
+        h1 = await fe.submit(_prompt(5), max_new_tokens=3)
+        h2 = await fe.submit(_prompt(6, seed=1), max_new_tokens=3)
+        with pytest.raises(QueueFullError) as ei:
+            fe.submit_nowait(_prompt(7, seed=2), max_new_tokens=3)
+        assert ei.value.limit == 2
+        await fe.drain()
+        # queue drained: submits are accepted again
+        h3 = await fe.submit(_prompt(7, seed=2), max_new_tokens=3)
+        await fe.drain()
+        return h1, h2, h3
+
+    h1, h2, h3 = asyncio.run(go())
+    assert all(h.done and h.error is None for h in (h1, h2, h3))
+    assert all(len(h.out_tokens) == 3 for h in (h1, h2, h3))
+
+
+def test_cancellation_frees_blocks_and_prefix_refs(model_and_params):
+    """Cancelling a mid-decode request releases its pool blocks AND its
+    prefix-cache references: with the cache on and every prompt sharing
+    a prefix, the pool must balance back to capacity after the cache is
+    cleared — a leaked adopted-block refcount would pin blocks."""
+    eng = _engine(model_and_params, prefix_cache=True)
+    fe = AsyncServeFrontend(eng)
+    prefix = _prompt(16, seed=3)
+
+    async def go():
+        hs = [await fe.submit(np.concatenate([prefix, _prompt(3 + i,
+                                                              seed=4 + i)]),
+                              max_new_tokens=12) for i in range(3)]
+        # tick until the victim has streamed a couple of tokens
+        for _ in range(200):
+            if len(hs[1].out_tokens) >= 2:
+                break
+            fe.step()
+            await asyncio.sleep(0)
+        assert len(hs[1].out_tokens) >= 2
+        assert hs[1].cancel()
+        await fe.drain()
+        return hs
+
+    hs = asyncio.run(go())
+    victim, rest = hs[1], [hs[0], hs[2]]
+    assert victim.done and victim.error == "cancelled"
+    assert 0 < len(victim.out_tokens) < 12
+    assert all(h.error is None and len(h.out_tokens) == 12 for h in rest)
+    assert eng.metrics.counters["cancelled"] == 1
+    eng.pool.check()
+    eng.prefix.clear()
+    assert eng.pool.free_blocks == eng.pool.capacity
+
+
+def test_deadline_expiry_with_fake_clock(model_and_params):
+    """Deadlines are absolute times on the engine's injectable clock: a
+    queued request and a running request both expire the tick after the
+    fake clock passes their deadline, free their blocks, and finish
+    their handles with error="deadline"."""
+    clk = _ManualClock()
+    eng = _engine(model_and_params, clock=clk, max_batch=1)
+    fe = AsyncServeFrontend(eng)
+
+    async def go():
+        run = await fe.submit(_prompt(5), max_new_tokens=20,
+                              deadline_ms=100.0)
+        queued = await fe.submit(_prompt(6, seed=1), max_new_tokens=4,
+                                 deadline_ms=50.0)   # max_batch=1: waits
+        for _ in range(4):                           # clock frozen: no expiry
+            fe.step()
+            await asyncio.sleep(0)
+        assert not run.done and not queued.done
+        assert run.out_tokens
+        clk.advance(0.075)                           # past queued's 50ms only
+        fe.step()
+        assert queued.done and queued.error == "deadline"
+        assert queued.out_tokens == []               # never admitted
+        clk.advance(0.050)                           # past run's 100ms
+        fe.step()
+        eng.flush()
+        fe._reap()
+        assert run.done and run.error == "deadline"
+        await run.wait()                             # must not hang
+        return run, queued
+
+    run, queued = asyncio.run(go())
+    assert 0 < len(run.out_tokens) < 20
+    assert eng.metrics.counters["deadline_expired"] == 2
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+
+
+def test_close_unblocks_live_handles(model_and_params):
+    """close() fails still-live requests with error="shutdown" so no
+    stream consumer or wait()-er hangs, and rejects later submits."""
+    eng = _engine(model_and_params)
+    fe = AsyncServeFrontend(eng)
+
+    async def go():
+        h = await fe.submit(_prompt(5), max_new_tokens=30)
+        fe.step()
+        fe.close()
+        await h.wait()
+        toks = [tok async for tok in h]              # stream terminates
+        with pytest.raises(FrontendClosedError):
+            fe.submit_nowait(_prompt(4, seed=9))
+        return h, toks
+
+    h, toks = asyncio.run(go())
+    assert h.done and h.error == "shutdown"
+    assert toks == h.out_tokens
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+
+
+def test_serve_forever_with_concurrent_clients(model_and_params):
+    """The launcher's shape, end to end: serve_forever as a task, N
+    client coroutines submitting and consuming concurrently, mixed
+    deadlines via the real clock (generous enough to never fire), clean
+    shutdown."""
+    eng = _engine(model_and_params, max_batch=3)
+    fe = AsyncServeFrontend(eng, idle_sleep=0.0)
+
+    async def client(i):
+        h = await fe.submit(_prompt(4 + i, seed=20 + i), max_new_tokens=4,
+                            deadline_ms=(60_000.0 if i % 2 else None))
+        toks = [tok async for tok in h]
+        return h, toks
+
+    async def go():
+        loop = asyncio.ensure_future(fe.serve_forever())
+        out = await asyncio.gather(*(client(i) for i in range(5)))
+        fe.close()
+        await loop
+        return out
+
+    out = asyncio.run(go())
+    for h, toks in out:
+        assert h.done and h.error is None
+        assert toks == h.out_tokens and len(toks) == 4
+    assert eng.metrics.counters["completed"] == 5
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity

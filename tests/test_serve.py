@@ -976,3 +976,255 @@ def test_register_with_evicted_parent_stops_chain():
     pool.free([b2], "w")
     pool.check()
     assert pool.free_blocks == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# async engine: double-buffered ticks + on-device sampling
+# ---------------------------------------------------------------------------
+
+
+def _mixed_sampling(reqs, base_seed=40):
+    """Give every other request a seeded temperature/top-k profile so a
+    stream exercises host-greedy AND device-categorical sampling."""
+    for r in reqs[::2]:
+        r.temperature, r.top_k, r.seed = 0.7, 12, base_seed + r.uid
+    return reqs
+
+
+@pytest.mark.parametrize("scenario", ["mixed_sampling", "preempt", "prefix"])
+def test_async_engine_matches_sync(scenario):
+    """The tentpole's acceptance bar: the double-buffered async tick is
+    token-for-token AND schedule-for-schedule identical to the sync
+    engine — under mixed greedy/seeded-sampling streams, under
+    preemption pressure, and with the prefix cache adopting blocks."""
+    m, params = _model()
+    vocab = m.cfg.vocab_size
+    kw = dict(num_blocks=16, block_size=8, max_batch=3, max_seq_len=64,
+              prefill_buckets=(16,))
+    if scenario == "preempt":
+        # 9 usable blocks against four 3+-block footprints: forces
+        # preempt-by-recompute, which async must replay identically
+        kw.update(num_blocks=10, block_size=4)
+
+    def make_reqs():
+        if scenario == "prefix":
+            rng = np.random.default_rng(5)
+            prefix = rng.integers(0, vocab, (16,))
+            return [Request(uid=i,
+                            prompt=np.concatenate(
+                                [prefix, rng.integers(0, vocab, (3 + i,))]),
+                            max_new_tokens=5)
+                    for i in range(4)]
+        reqs = _requests(vocab, [9, 13, 6, 11], max_new=6)
+        if scenario == "mixed_sampling":
+            _mixed_sampling(reqs)
+        return reqs
+
+    runs, counters = {}, {}
+    for mode in ("sync", "async"):
+        eng = PagedServeEngine(m, params,
+                               prefix_cache=(scenario == "prefix"), **kw)
+        reqs = make_reqs()
+        done = (eng.run(reqs, max_ticks=300) if mode == "sync"
+                else eng.run_async(reqs, max_ticks=300))
+        assert len(done) == len(reqs)
+        assert all(r.error is None for r in done)
+        eng.pool.check()
+        if eng.prefix is not None:
+            eng.prefix.clear()
+        assert eng.pool.free_blocks == eng.pool.capacity
+        runs[mode] = _by_uid(done)
+        counters[mode] = {k: eng.metrics.counters[k]
+                         for k in ("admitted", "preempted", "tokens_out",
+                                   "prefill_chunks")}
+    assert runs["async"] == runs["sync"]
+    assert counters["async"] == counters["sync"]
+    if scenario == "preempt":
+        assert counters["sync"]["preempted"] > 0
+    if scenario == "prefix":
+        assert counters["sync"]["prefill_chunks"] > 0
+
+
+def test_async_engine_overlaps_device_windows():
+    """The async engine's reason to exist, measured: its union-merged
+    dispatch->sync device windows must cover a larger fraction of the
+    serving wall time than the sync engine's on the same workload."""
+    m, params = _model()
+    busy = {}
+    for mode in ("sync", "async"):
+        eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                               max_batch=3, max_seq_len=64,
+                               prefill_buckets=(16,))
+        reqs = _requests(m.cfg.vocab_size, [5, 7, 9], max_new=12)
+        done = (eng.run(reqs, max_ticks=300) if mode == "sync"
+                else eng.run_async(reqs, max_ticks=300))
+        assert all(r.error is None for r in done)
+        busy[mode] = eng.metrics.device_busy_fraction()
+    assert 0.0 < busy["sync"] <= 1.0
+    assert busy["async"] > busy["sync"], busy
+
+
+def test_seeded_sampling_deterministic_and_seed_sensitive():
+    """Per-request seeds make sampled decode reproducible run-to-run
+    (fresh engine, fresh jit) and actually change tokens when changed."""
+    m, params = _model()
+
+    def run_once(base_seed):
+        eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                               max_batch=2, max_seq_len=64,
+                               prefill_buckets=(16,))
+        reqs = _requests(m.cfg.vocab_size, [6, 9], max_new=8,
+                         temperature=1.2)
+        for r in reqs:
+            r.seed = base_seed + r.uid
+        return _by_uid(eng.run_async(reqs, max_ticks=200))
+
+    a, b, c = run_once(3), run_once(3), run_once(123)
+    assert a == b
+    assert a != c
+
+
+def test_sync_engine_honors_request_seed_like_async():
+    """The host-side sampler must derive per-token keys exactly like the
+    on-device path: same seeded requests, sync vs async, same tokens."""
+    m, params = _model()
+    outs = {}
+    for mode in ("sync", "async"):
+        eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                               max_batch=2, max_seq_len=64,
+                               prefill_buckets=(16,))
+        reqs = _requests(m.cfg.vocab_size, [6, 9], max_new=8,
+                         temperature=0.9, top_k=8)
+        for r in reqs:
+            r.seed = 77 + r.uid
+        done = (eng.run(reqs, max_ticks=200) if mode == "sync"
+                else eng.run_async(reqs, max_ticks=200))
+        outs[mode] = _by_uid(done)
+    assert outs["sync"] == outs["async"]
+
+
+def test_async_mode_interleaves_with_sync_mode():
+    """step() flushes any in-flight async step first, so callers can mix
+    tick modes mid-stream without losing or duplicating tokens."""
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                           max_batch=2, max_seq_len=64,
+                           prefill_buckets=(16,))
+    reqs = _requests(m.cfg.vocab_size, [5, 8], max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    for i in range(200):
+        if all(r.done for r in reqs):
+            break
+        (eng.step_async if i % 2 else eng.step)()
+    eng.flush()
+    assert all(r.done and r.error is None for r in reqs)
+    mixed = _by_uid(reqs)
+
+    ref_eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                               max_batch=2, max_seq_len=64,
+                               prefill_buckets=(16,))
+    ref = _by_uid(ref_eng.run(_requests(m.cfg.vocab_size, [5, 8],
+                                        max_new=6), max_ticks=200))
+    assert mixed == ref
+    assert {len(v) for v in mixed.values()} == {6}
+
+
+# ---------------------------------------------------------------------------
+# callback isolation, deadlines, cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_callback_error_fails_only_that_request():
+    """Regression: a raising on_token callback must not wedge the tick —
+    the offending request retires with error="callback", everyone else
+    decodes to completion, and the pool balances.  All three loops:
+    paged sync, paged async, slots."""
+    m, params = _model()
+
+    def boom(tok, req):
+        raise RuntimeError("client went away")
+
+    def check(done, reqs, pool=None):
+        bad = next(r for r in done if r.uid == 0)
+        good = [r for r in done if r.uid != 0]
+        assert bad.done and bad.error == "callback"
+        assert all(r.error is None and len(r.out_tokens) == 4
+                   for r in good)
+        if pool is not None:
+            pool.check()
+            assert pool.free_blocks == pool.capacity
+
+    for mode in ("sync", "async"):
+        eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                               max_batch=2, max_seq_len=64,
+                               prefill_buckets=(16,))
+        reqs = _requests(m.cfg.vocab_size, [5, 7, 6], max_new=4)
+        reqs[0].on_token = boom
+        done = (eng.run(reqs, max_ticks=200) if mode == "sync"
+                else eng.run_async(reqs, max_ticks=200))
+        check(done, reqs, eng.pool)
+        assert eng.metrics.counters["failed"] == 1
+
+    slot_eng = ServeEngine(m, params, slots=2, cache_len=64,
+                           prefill_buckets=(16,))
+    reqs = _requests(m.cfg.vocab_size, [5, 7, 6], max_new=4)
+    reqs[0].on_token = boom
+    check(slot_eng.run(reqs, max_ticks=200), reqs)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_deadline_expiry_frees_blocks_waiting_and_running(mode):
+    """Deadline sweep at the top of every tick, both modes: an expired
+    WAITING request fails without ever touching the pool; an expired
+    RUNNING request keeps its partial output, retires with
+    error="deadline", and releases its blocks."""
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                           max_batch=2, max_seq_len=64,
+                           prefill_buckets=(16,))
+    step = eng.step_async if mode == "async" else eng.step
+    reqs = _requests(m.cfg.vocab_size, [5, 7], max_new=6)
+    expired, live = reqs
+    expired.deadline_s = -1.0              # already past on any clock
+    eng.submit(expired)
+    eng.submit(live)
+    step()
+    assert expired.done and expired.error == "deadline"
+    assert expired.out_tokens == []
+    for _ in range(4):                     # let the live one make progress
+        step()
+    assert live.out_tokens and not live.done
+    live.deadline_s = -1.0
+    step()
+    eng.flush()
+    assert live.done and live.error == "deadline"
+    assert 0 < len(live.out_tokens) < 6
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+    assert eng.metrics.counters["deadline_expired"] == 2
+    assert eng.metrics.counters["failed"] == 2
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_cancel_waiting_and_running_releases_blocks(mode):
+    m, params = _model()
+    eng = PagedServeEngine(m, params, num_blocks=16, block_size=8,
+                           max_batch=1, max_seq_len=64,
+                           prefill_buckets=(16,))
+    step = eng.step_async if mode == "async" else eng.step
+    running, queued = _requests(m.cfg.vocab_size, [5, 7], max_new=8)
+    eng.submit(running)
+    eng.submit(queued)                     # max_batch=1: stays waiting
+    for _ in range(3):
+        step()
+    assert running.out_tokens and not running.done
+    assert eng.cancel(queued)              # still waiting
+    assert queued.done and queued.error == "cancelled"
+    assert eng.cancel(running)             # mid-decode
+    eng.flush()
+    assert running.done and running.error == "cancelled"
+    assert not eng.cancel(running)         # already finished
+    eng.pool.check()
+    assert eng.pool.free_blocks == eng.pool.capacity
+    assert eng.metrics.counters["cancelled"] == 2

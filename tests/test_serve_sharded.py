@@ -194,6 +194,47 @@ def test_sharded_scan_stacked_layers():
     assert out["k_spec"] == "PartitionSpec(None, None, None, 'model')"
 
 
+def test_sharded_async_engine_matches_sync():
+    """The double-buffered async tick composes with the mesh engine: the
+    on-device sampler (per-row PRNG keys threaded through the sharded
+    ``decode_and_sample`` jit) must reproduce the sync engine's host
+    sampling token-for-token over the (2, 4) mesh, for greedy AND
+    seeded temperature/top-k rows, and overlap more device time."""
+    out = run_sub("""
+    cfg = get_reduced("opt_6_7b").replace(
+        remat=False, dtype="float32", n_heads=8, n_kv_heads=4, head_dim=16)
+    model = Model(cfg)
+    params = f32(model.init(jax.random.PRNGKey(0)))
+
+    def sampled():
+        rs = requests(cfg)
+        for r in rs[1::2]:
+            r.temperature, r.top_k, r.seed = 0.7, 8, 99 + r.uid
+        return rs
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    ref_eng = PagedServeEngine(model, params, mesh=mesh,
+                               paged_kernel="fused", **KW)
+    ref = tokens_of(ref_eng.run(sampled()))
+    ref_eng.pool.check()
+    eng = PagedServeEngine(model, params, mesh=mesh, paged_kernel="fused",
+                           **KW)
+    got = tokens_of(eng.run_async(sampled()))
+    eng.pool.check()
+    print(json.dumps({
+        "equal": got == ref,
+        "path": eng.decode_path,
+        "busy_async": eng.metrics.device_busy_fraction(),
+        "busy_sync": ref_eng.metrics.device_busy_fraction(),
+        "pool_free": eng.pool.free_blocks == eng.pool.capacity,
+    }))
+    """, prelude=_COMMON)
+    assert out["equal"], "sharded async tokens diverged from sync"
+    assert out["path"] == "fused"
+    assert out["pool_free"]
+    assert out["busy_async"] > out["busy_sync"], out
+
+
 def test_sharded_prefix_cache_matches_single_device_off():
     """Prefix sharing is mesh-transparent: block tables (and the prefix
     index) are replicated host state, so the sharded engine with the
