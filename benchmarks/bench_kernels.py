@@ -19,7 +19,13 @@ from repro import tune as tune_mod
 from repro.core import bcq
 from repro.kernels.lut_gemm import lut_gemm, ref as lref
 from repro.kernels.bcq_matmul import bcq_matmul
-from repro.kernels.paged_attention import paged_attention, paged_decode_ref
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_int8,
+                                           paged_attention_mla,
+                                           paged_decode_int8_ref,
+                                           paged_decode_mla_ref,
+                                           paged_decode_ref, paged_prefill,
+                                           paged_prefill_ref)
 
 
 def _paged_decode_case(rng, *, b=4, h=8, hkv=4, d=32, nb=33, bs=8, pages=8):
@@ -69,6 +75,64 @@ def _paged_attention_bench(rng):
         lambda: jax.block_until_ready(
             paged_decode_ref(q, k, v, pos, tables, positions)), n=2)
     return err, live / total
+
+
+def _paged_variant_bench(rng):
+    """The coverage-matrix variants vs their gathered oracles: int8-KV
+    decode (per-slot scales folded in-kernel; bf16 compute sets the
+    error scale), MLA latent decode, and the chunked-prefill flash
+    kernel (float pool).  Returns the three max-errors."""
+    q, k, v, pos, tables, positions = _paged_decode_case(rng)
+    nb, bs, hkv, d = k.shape
+    k8 = jnp.asarray(np.clip(np.round(rng.normal(size=k.shape) * 40),
+                             -127, 127), jnp.int8)
+    v8 = jnp.asarray(np.clip(np.round(rng.normal(size=v.shape) * 40),
+                             -127, 127), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.05, (nb, bs, hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.01, 0.05, (nb, bs, hkv)), jnp.float32)
+    want8 = paged_decode_int8_ref(q, k8, v8, ks, vs, pos, tables, positions)
+    got8 = paged_attention_int8(q, k8, v8, ks, vs, pos, tables, positions,
+                                interpret=True)
+    err8 = float(jnp.abs(got8.astype(jnp.float32)
+                         - want8.astype(jnp.float32)).max())
+
+    b, h = q.shape[0], q.shape[1]
+    lora, dr = 16, 8
+    ckv = jnp.asarray(rng.normal(size=(nb, bs, lora)), jnp.float32)
+    krope = jnp.asarray(rng.normal(size=(nb, bs, dr)), jnp.float32)
+    q_eff = jnp.asarray(rng.normal(size=(b, h, lora)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(b, h, dr)), jnp.float32)
+    sc = (lora + dr) ** -0.5
+    want_m = paged_decode_mla_ref(q_eff, q_rope, ckv, krope, pos, tables,
+                                  positions, scale=sc)
+    got_m = paged_attention_mla(q_eff, q_rope, ckv, krope, pos, tables,
+                                positions, scale=sc, interpret=True)
+    err_m = float(jnp.abs(got_m - want_m).max())
+
+    c = 6
+    qc = jnp.asarray(rng.normal(size=(b, c, h, d)), jnp.float32)
+    cpos = (np.asarray(positions)[:, None]
+            - np.arange(c - 1, -1, -1)[None]).astype(np.int32)
+    cpos = jnp.asarray(np.where(cpos < 0, -1, cpos))
+    want_p = paged_prefill_ref(qc, k, v, pos, tables, cpos)
+    got_p = paged_prefill(qc, k, v, pos, tables, cpos, interpret=True)
+    err_p = float(jnp.abs(got_p - want_p).max())
+
+    print(f"kernels,paged_attention_int8_maxerr={err8:.2e},"
+          f"paged_attention_mla_maxerr={err_m:.2e},"
+          f"paged_prefill_maxerr={err_p:.2e}")
+    assert err8 < 5e-2 and err_m < 1e-4 and err_p < 1e-4
+    common.bench(
+        "kernels,paged_attention_int8_interpret",
+        lambda: jax.block_until_ready(
+            paged_attention_int8(q, k8, v8, ks, vs, pos, tables, positions,
+                                 interpret=True)), n=2)
+    common.bench(
+        "kernels,paged_prefill_interpret",
+        lambda: jax.block_until_ready(
+            paged_prefill(qc, k, v, pos, tables, cpos, interpret=True)),
+        n=2)
+    return err8, err_m, err_p
 
 
 def _tuned_vs_default(rng):
@@ -124,6 +188,7 @@ def run(bench_json: str = ""):
     common.bench("kernels,dense_oracle",
                  lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
     paged_err, read_ratio = _paged_attention_bench(rng)
+    err_int8, err_mla, err_prefill = _paged_variant_bench(rng)
     speedup = _tuned_vs_default(rng)
     if bench_json:
         # max-errors gate with generous relative slack (FP noise varies
@@ -135,6 +200,14 @@ def run(bench_json: str = ""):
             "bcq_matmul_maxerr": _scalar(err2, "lower", 3.0, abs_max=1e-3),
             "paged_attention_maxerr":
                 _scalar(paged_err, "lower", 3.0, abs_max=1e-4),
+            # int8's bound reflects bf16 compute + running-vs-global
+            # softmax rounding, not a kernel defect
+            "paged_attention_int8_maxerr":
+                _scalar(err_int8, "lower", 3.0, abs_max=5e-2),
+            "paged_attention_mla_maxerr":
+                _scalar(err_mla, "lower", 3.0, abs_max=1e-4),
+            "paged_prefill_maxerr":
+                _scalar(err_prefill, "lower", 3.0, abs_max=1e-4),
             "paged_kv_block_read_ratio":
                 _scalar(read_ratio, "lower", 0.0),
             # timing-derived: the structural abs_min=1.0 floor is the

@@ -5,11 +5,14 @@ paged engine on a reduced model — CPU wall-times, NOT TPU performance,
 but they pin the serving subsystem's behavior (admission, chunked
 prefill, preemption accounting) and the dense-vs-quantized comparison
 the paper's deployment story rests on.  A second section compares the
-fused Pallas paged-attention decode path against the gathered
-``paged_view`` fallback: token-for-token equality, per-token latency,
-and the analytic KV bytes moved per decode token (the CI smoke asserts
-the fused path's bytes are strictly below the gathered path's and its
-decode logits are finite).  A third section replays a shared-prefix
+fused Pallas paged-attention paths (decode AND chunked prefill) against
+the gathered ``paged_view`` fallback — token-for-token equality,
+per-token latency, and the analytic KV bytes moved per decode and per
+prefill token (the CI smoke asserts the fused paths' bytes are strictly
+below the gathered paths' and the decode logits are finite) — and
+repeats the comparison on int8-KV pools, where the fused kernels fold
+the per-slot dequant scales in-kernel.  A third section replays a
+shared-prefix
 stream with the prefix cache on vs off at equal pool memory and asserts
 identical tokens, hit-rate > 0, blocks saved > 0, effective capacity
 peaking above 1x and a single-chunk warm-probe prefill.  A fourth
@@ -89,17 +92,14 @@ def bench_backend(label, model, params, cfg, *, requests=6, max_new=8,
     return row
 
 
-def bench_paged_kernel(model, params, cfg, *, requests=4, max_new=6,
-                       num_blocks=24, block_size=8, max_batch=3,
-                       max_ticks=400):
-    """Fused Pallas paged-attention decode vs the gathered paged_view
-    path: same request stream, token-for-token equal outputs, per-token
-    decode latency and the analytic KV bytes moved per decode token.
-
-    The CPU wall-times favor the *gathered* path (the fused kernel runs
-    under the Pallas interpreter off-TPU); the KV-bytes column is the
-    roofline quantity the fusion exists for and must always favor the
-    fused path."""
+def _kernel_compare(label, model, params, cfg, *, requests=4, max_new=6,
+                    num_blocks=24, block_size=8, max_batch=3,
+                    max_ticks=400):
+    """Drive the SAME request stream through a gathered and a fused
+    engine of ``model``; assert token-for-token equality, that the fused
+    engine actually resolved both paged paths to the fused kernels, and
+    that the analytic KV traffic strictly favors fusion on BOTH the
+    decode and the chunked-prefill leg.  Returns the two metric rows."""
     rows, outs = [], {}
     for mode in ("gather", "fused"):
         eng = PagedServeEngine(model, params, num_blocks=num_blocks,
@@ -113,34 +113,64 @@ def bench_paged_kernel(model, params, cfg, *, requests=4, max_new=6,
         eng.pool.check()
         outs[mode] = {r.uid: r.out_tokens for r in done}
         s = eng.metrics.summary()
+        pk = s["paged_kernel"]
         row = {
             "paged_kernel": mode,
             "decode_path": eng.decode_path,
+            "prefill_path": eng.prefill_path,
             "requests_done": len(done),
             "tokens": s["counters"]["tokens_out"],
             "tok_per_s": s["counters"]["tokens_out"] / dt if dt > 0 else 0.0,
             "per_token_ms_p50": s["per_token_s"]["p50"] * 1e3,
-            "kv_bytes_per_token_fused":
-                s["paged_kernel"]["kv_bytes_per_token_fused"],
+            "kv_bytes_per_token_fused": pk["kv_bytes_per_token_fused"],
             "kv_bytes_per_token_gathered":
-                s["paged_kernel"]["kv_bytes_per_token_gathered"],
+                pk["kv_bytes_per_token_gathered"],
+            "kv_bytes_per_prefill_token_fused":
+                pk["kv_bytes_per_prefill_token_fused"],
+            "kv_bytes_per_prefill_token_gathered":
+                pk["kv_bytes_per_prefill_token_gathered"],
         }
-        print(f"serve,paged_kernel={mode},path={row['decode_path']},"
+        print(f"serve,paged_kernel={mode},variant={label},"
+              f"path={row['decode_path']},"
+              f"prefill_path={row['prefill_path']},"
               f"tok_s={row['tok_per_s']:.1f},"
               f"per_token_ms_p50={row['per_token_ms_p50']:.1f},"
               f"kv_B_per_tok_fused={row['kv_bytes_per_token_fused']:.0f},"
-              f"kv_B_per_tok_gathered={row['kv_bytes_per_token_gathered']:.0f}")
+              f"kv_B_per_tok_gathered={row['kv_bytes_per_token_gathered']:.0f},"
+              f"kv_B_per_pf_tok_fused="
+              f"{row['kv_bytes_per_prefill_token_fused']:.0f},"
+              f"kv_B_per_pf_tok_gathered="
+              f"{row['kv_bytes_per_prefill_token_gathered']:.0f}")
         rows.append(row)
     assert outs["gather"] == outs["fused"], \
-        "fused decode diverged from the gathered oracle"
+        f"fused {label} serving diverged from the gathered oracle"
     fused_row = rows[1]
     assert fused_row["decode_path"] == "fused", fused_row
-    # the fusion's point: strictly fewer KV bytes per decode token
+    assert fused_row["prefill_path"] == "fused", fused_row
+    # the fusion's point: strictly fewer KV bytes per token on BOTH legs
     assert fused_row["kv_bytes_per_token_fused"] \
         < fused_row["kv_bytes_per_token_gathered"], fused_row
+    assert fused_row["kv_bytes_per_prefill_token_fused"] \
+        < fused_row["kv_bytes_per_prefill_token_gathered"], fused_row
+    return rows
+
+
+def bench_paged_kernel(model, params, cfg, *, requests=4, max_new=6,
+                       **kw):
+    """Fused Pallas paged-attention kernels (decode + chunked prefill)
+    vs the gathered paged_view path: same request stream, token-for-
+    token equal outputs, per-token latency and the analytic KV bytes
+    moved per decode AND per prefill token.
+
+    The CPU wall-times favor the *gathered* path (the fused kernels run
+    under the Pallas interpreter off-TPU); the KV-bytes columns are the
+    roofline quantities the fusion exists for and must always favor the
+    fused path."""
+    rows = _kernel_compare("float", model, params, cfg,
+                           requests=requests, max_new=max_new, **kw)
 
     # finiteness probe on the fused path's raw decode logits (the engine
-    # only exposes argmax'd tokens)
+    # only exposes argmax'd tokens); prefill runs fused here too
     import jax.numpy as jnp
     from repro.serve import set_block_tables
     mf = Model(cfg.replace(paged_kernel="fused"))
@@ -157,6 +187,20 @@ def bench_paged_kernel(model, params, cfg, *, requests=4, max_new=6,
         "fused decode produced non-finite logits"
     print("serve,paged_kernel_finite=1,paged_kernel_equal=1")
     return rows
+
+
+def bench_paged_kernel_int8(model, params, cfg, *, requests=4, max_new=6,
+                            **kw):
+    """int8-KV pools, fused vs gathered: the fused kernels DMA the
+    per-slot scale rows alongside each block and fold the dequant into
+    the score/value epilogues, so the serve-level contract is the same
+    as the float variant — identical greedy tokens and strictly fewer
+    KV bytes per token on both the decode and the prefill leg (the byte
+    estimates on BOTH paths include the scale rows; see
+    ``attention.kv_entry_bytes``)."""
+    cfg8 = cfg.replace(kv_cache_bits=8)
+    return _kernel_compare("int8", Model(cfg8), params, cfg8,
+                           requests=requests, max_new=max_new, **kw)
 
 
 def _drive_prefix_stream(eng, prefix, tails, probe_tail, max_new,
@@ -642,8 +686,8 @@ def _scalar(value, direction, rel_tol, **bounds):
     return s
 
 
-def write_bench_json(path, rows, kernel_rows, prefix_rows, trace_row,
-                     async_row, bits):
+def write_bench_json(path, rows, kernel_rows, int8_rows, prefix_rows,
+                     trace_row, async_row, bits):
     """Schema-versioned tracked-scalar file for the perf-trajectory gate
     (``benchmarks.compare_trajectory``).  Wall-clock scalars get loose
     tolerances (CI-runner variance is large on shared boxes); scalars
@@ -652,6 +696,7 @@ def write_bench_json(path, rows, kernel_rows, prefix_rows, trace_row,
     dense = next(r for r in rows if r["backend"] == "dense")
     bcq = next(r for r in rows if r["backend"].startswith("bcq"))
     fused = next(r for r in kernel_rows if r["paged_kernel"] == "fused")
+    fused8 = next(r for r in int8_rows if r["paged_kernel"] == "fused")
     pfx_on = next(r for r in prefix_rows if r["prefix_cache"] == "on")
     scalars = {
         # wall-clock: gate only order-of-magnitude collapses
@@ -664,6 +709,20 @@ def write_bench_json(path, rows, kernel_rows, prefix_rows, trace_row,
             _scalar(fused["kv_bytes_per_token_fused"], "lower", 0.05),
         "kv_bytes_per_token_gathered":
             _scalar(fused["kv_bytes_per_token_gathered"], "lower", 0.05),
+        # int8-KV pools: fused decode/prefill must keep beating the
+        # gathered view even with the scale rows riding the DMA
+        "kv_bytes_per_token_fused_int8":
+            _scalar(fused8["kv_bytes_per_token_fused"], "lower", 0.05),
+        "kv_bytes_per_token_gathered_int8":
+            _scalar(fused8["kv_bytes_per_token_gathered"], "lower", 0.05),
+        # chunked prefill: the fused flash kernel reads the pool through
+        # the block table instead of materializing the gathered view
+        "prefill_kv_bytes_per_token_fused":
+            _scalar(fused["kv_bytes_per_prefill_token_fused"],
+                    "lower", 0.05),
+        "prefill_kv_bytes_per_token_gathered":
+            _scalar(fused["kv_bytes_per_prefill_token_gathered"],
+                    "lower", 0.05),
         "prefix_hit_rate":
             _scalar(pfx_on["prefix_hit_rate"], "higher", 0.0),
         "prefix_blocks_saved":
@@ -715,10 +774,15 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
                               requests=requests, max_new=max_new))
     # both backends must serve the full stream through the paged engine
     assert all(r["requests_done"] == requests for r in rows)
-    common.header("Paged decode kernel: fused (interpret) vs gathered view")
+    common.header("Paged kernels: fused (interpret) vs gathered view — "
+                  "decode + chunked prefill")
     kernel_rows = bench_paged_kernel(model, params, cfg,
                                      requests=min(requests, 4),
                                      max_new=max_new)
+    common.header("Paged kernels, int8-KV pools: fused vs gathered")
+    int8_rows = bench_paged_kernel_int8(model, params, cfg,
+                                        requests=min(requests, 4),
+                                        max_new=max_new)
     common.header("Prefix cache: shared-prefix stream, cache on vs off")
     prefix_rows = bench_prefix_cache(model, params, cfg, max_new=max_new)
     common.header("Trace overhead: event trace on vs off, warm engine")
@@ -740,6 +804,7 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"rows": rows, "paged_kernel_rows": kernel_rows,
+                       "paged_kernel_int8_rows": int8_rows,
                        "prefix_rows": prefix_rows,
                        "trace_row": trace_row,
                        "async_row": async_row,
@@ -747,8 +812,8 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
                       f, indent=2, sort_keys=True)
         print(f"serve,metrics_json={json_path}")
     if bench_json:
-        write_bench_json(bench_json, rows, kernel_rows, prefix_rows,
-                         trace_row, async_row, bits)
+        write_bench_json(bench_json, rows, kernel_rows, int8_rows,
+                         prefix_rows, trace_row, async_row, bits)
     return rows
 
 

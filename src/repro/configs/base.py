@@ -127,11 +127,13 @@ class ModelConfig:
                                       # bytes that dominate long-context
                                       # decode (beyond-paper extension of
                                       # the weight-quantization insight)
-    paged_kernel: str = "auto"        # paged decode attention path:
-                                      # auto (fused Pallas kernel where
-                                      # hardware-native, else gathered
-                                      # view) | fused (force the kernel;
-                                      # interpret off-TPU) | gather
+    paged_kernel: str = "auto"        # paged attention path (decode AND
+                                      # chunked prefill, resolved per
+                                      # variant): auto (fused Pallas
+                                      # kernels where hardware-native,
+                                      # else gathered view) | fused
+                                      # (force; interpret off-TPU) |
+                                      # gather
 
     # ---------------------------------------------------------------
     @property

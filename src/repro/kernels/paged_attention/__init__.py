@@ -1,4 +1,10 @@
-from .ops import divisor_clamp, paged_attention
-from .ref import paged_decode_ref
+from .ops import (divisor_clamp, paged_attention, paged_attention_int8,
+                  paged_attention_mla, paged_prefill)
+from .ref import (paged_decode_int8_ref, paged_decode_mla_ref,
+                  paged_decode_ref, paged_prefill_ref)
 
-__all__ = ["paged_attention", "paged_decode_ref", "divisor_clamp"]
+__all__ = [
+    "paged_attention", "paged_attention_int8", "paged_attention_mla",
+    "paged_prefill", "paged_decode_ref", "paged_decode_int8_ref",
+    "paged_decode_mla_ref", "paged_prefill_ref", "divisor_clamp",
+]

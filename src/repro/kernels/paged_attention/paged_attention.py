@@ -30,6 +30,33 @@ innermost; the output block (revisited across pages) doubles as the
 FP32 accumulator, with running max / sum in VMEM scratch.  Rows with no
 live slot at all (idle batch rows parked on the trash block) produce
 zeros — the engine discards their outputs.
+
+Variant coverage (the FLUTE offline-restructure-then-fuse pattern: all
+layout work happens at quantize/admission time so the in-loop index
+math stays trivial):
+
+* ``_paged_attn_int8_kernel`` — int8-KV pools.  The per-slot
+  ``k_scale``/``v_scale`` rows (``[NB, BS, Hkv]`` f32, written at
+  admission by ``_quantize_kv``) ride the *same* block-table-driven DMA
+  as the KV block, and the dequant fold happens on the score / value
+  epilogues in-kernel: raw int8 scores are multiplied by ``k_scale``
+  before the running max, and ``v_scale`` folds into the PV contraction
+  only — the running sum ``l`` accumulates *unscaled* probabilities so
+  the final normalization matches the gathered ``decode_attend``
+  ordering (softmax first, then ``p * v_scale``).
+* ``_paged_attn_mla_kernel`` — MLA latent pools.  The caller absorbs
+  ``w_uk`` into the query (``q_eff = q_nope @ w_uk``) so scores live in
+  latent space; the kernel reads ``ckv``/``k_rope`` blocks straight
+  from the pool and returns the *latent* context (``w_uv`` is applied
+  by the caller).  ``kv_map_fn`` never runs: the per-block compute IS
+  the absorbed form.
+* ``_paged_prefill_kernel`` — chunked-prefill flash attention.  The
+  current chunk's queries attend over prior context (and the chunk
+  itself, already inserted into the pool) via the same scalar-prefetch
+  block-table indexing, with per-query causal masking across the chunk
+  boundary and an online softmax over pool blocks.  Pad query rows
+  (``pos < 0``) see no live slot and produce zeros.  An int8 flavour
+  folds the per-slot scales exactly like the decode variant.
 """
 from __future__ import annotations
 
@@ -149,3 +176,360 @@ def paged_attention_tiled(q, k_pool, v_pool, pos_pool, tables, positions, *,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), jnp.float32),
         interpret=interpret,
     )(tables, positions, q, k_pool, v_pool, pos_pool)
+
+
+def _paged_attn_int8_kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref,
+                            ks_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref, *,
+                            block_size: int, pages: int):
+    """int8-KV decode: per-slot scale rows ride the block-table DMA and
+    fold into the score / value epilogues (gathered ``decode_attend``
+    ordering: k_scale before softmax, v_scale after — so ``l`` sums the
+    UNSCALED probabilities)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0]                               # [bh, rep, d] bf16 pre-scaled
+    k = k_ref[0].astype(q.dtype)               # [bs, bh, d] int8 -> bf16
+    v = v_ref[0].astype(q.dtype)
+    ks = ks_ref[0]                             # [bs, bh] f32
+    vs = vs_ref[0]
+    s = jnp.einsum("hrd,khd->hrk", q, k,
+                   preferred_element_type=jnp.float32)   # [bh, rep, bs]
+    s = s * ks.T[:, None, :]                   # dequant fold, pre-softmax
+
+    entry = tables_ref[b, j]
+    qpos = qpos_ref[b]
+    logical = j * block_size + lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    slot_pos = pos_ref[...]                    # [1, bs]
+    ok = (entry >= 0) & (slot_pos == logical) & (slot_pos <= qpos)
+    okb = ok[:, None, :]
+    s = jnp.where(okb, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    # l accumulates UNSCALED p: v_scale is a value-side factor, not a
+    # probability reweighting — normalizing by scaled sums would diverge
+    # from softmax-then-(p * v_scale)
+    l_ref[...] = l_prev * corr + p.sum(axis=-1)
+    pw = p * vs.T[:, None, :]                  # [bh, rep, bs]
+    pv = jnp.einsum("hrk,khd->hrd", pw.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+
+    @pl.when(j == pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = o_ref[0] / jnp.maximum(l, 1e-30)[..., None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "block_h", "interpret"),
+)
+def paged_attention_int8_tiled(q, k_pool, v_pool, k_scale, v_scale,
+                               pos_pool, tables, positions, *,
+                               block_size: int, block_h: int,
+                               interpret: bool = False):
+    """int8-KV tiled kernel call.
+
+    q: [B, Hkv, rep, D] *compute* dtype (bf16), pre-scaled by the caller.
+    k_pool / v_pool: int8 [NB, BS, Hkv, D]; k_scale / v_scale: f32
+    [NB, BS, Hkv] (per-slot, per-kv-head dequant scales).
+    Returns f32 [B, Hkv, rep, D].
+    """
+    b, hkv, rep, d = q.shape
+    nb, bs = pos_pool.shape
+    pages = tables.shape[1]
+    assert hkv % block_h == 0, (hkv, block_h)
+    assert bs == block_size and k_pool.shape[:2] == (nb, bs)
+    assert k_scale.shape == (nb, bs, hkv), (k_scale.shape, (nb, bs, hkv))
+
+    kernel = functools.partial(_paged_attn_int8_kernel,
+                               block_size=block_size, pages=pages)
+
+    def _pool_idx(bi, hi, ji, tables, qpos):
+        return (jnp.maximum(tables[bi, ji], 0), 0, hi, 0)
+
+    def _scale_idx(bi, hi, ji, tables, qpos):
+        return (jnp.maximum(tables[bi, ji], 0), 0, hi)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # tables, positions
+        grid=(b, hkv // block_h, pages),
+        in_specs=[
+            pl.BlockSpec((1, block_h, rep, d),
+                         lambda bi, hi, ji, tables, qpos: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_size, block_h, d), _pool_idx),
+            pl.BlockSpec((1, block_size, block_h, d), _pool_idx),
+            pl.BlockSpec((1, block_size, block_h), _scale_idx),
+            pl.BlockSpec((1, block_size, block_h), _scale_idx),
+            pl.BlockSpec((1, block_size),
+                         lambda bi, hi, ji, tables, qpos:
+                         (jnp.maximum(tables[bi, ji], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, rep, d),
+                               lambda bi, hi, ji, tables, qpos:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_h, rep), jnp.float32),
+            pltpu.VMEM((block_h, rep), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), jnp.float32),
+        interpret=interpret,
+    )(tables, positions, q, k_pool, v_pool, k_scale, v_scale, pos_pool)
+
+
+def _paged_attn_mla_kernel(tables_ref, qpos_ref, qe_ref, qr_ref, ckv_ref,
+                           kr_ref, pos_ref, o_ref, m_ref, l_ref, *,
+                           block_size: int, pages: int, scale: float):
+    """MLA absorbed decode over latent pool blocks.  Scores are computed
+    in latent space (``q_eff = q_nope @ w_uk`` absorbed by the caller)
+    plus the decoupled rope term; the accumulated output is the LATENT
+    context (caller applies ``w_uv``)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qe = qe_ref[0]                             # [bh, lora] f32
+    qr = qr_ref[0]                             # [bh, dr] f32
+    ckv = ckv_ref[0].astype(jnp.float32)       # [bs, lora]
+    kr = kr_ref[0].astype(jnp.float32)         # [bs, dr]
+    s = (jnp.einsum("hl,kl->hk", qe, ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("hr,kr->hk", qr, kr,
+                      preferred_element_type=jnp.float32)) * scale
+
+    entry = tables_ref[b, j]
+    qpos = qpos_ref[b]
+    logical = j * block_size + lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    slot_pos = pos_ref[...]                    # [1, bs]
+    ok = (entry >= 0) & (slot_pos == logical) & (slot_pos <= qpos)
+    s = jnp.where(ok, s, NEG_INF)              # [1, bs] broadcasts over h
+
+    m_prev = m_ref[...]                        # [bh, 1]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    pv = jnp.einsum("hk,kl->hl", p, ckv,
+                    preferred_element_type=jnp.float32)
+    o_ref[0] = o_ref[0] * corr + pv
+
+    @pl.when(j == pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = o_ref[0] / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "block_h", "scale", "interpret"),
+)
+def paged_attention_mla_tiled(q_eff, q_rope, ckv_pool, krope_pool,
+                              pos_pool, tables, positions, *, scale: float,
+                              block_size: int, block_h: int,
+                              interpret: bool = False):
+    """MLA tiled kernel call (absorbed decode).
+
+    q_eff: f32 [B, H, lora] (w_uk already absorbed); q_rope: f32
+    [B, H, rope_dim]; ckv_pool: [NB, BS, lora]; krope_pool:
+    [NB, BS, rope_dim]; pos_pool: int32 [NB, BS].
+    Returns the latent context, f32 [B, H, lora].  ``block_h`` tiles the
+    QUERY head dim (MLA has no kv-head replication).
+    """
+    b, h, lora = q_eff.shape
+    dr = q_rope.shape[-1]
+    nb, bs = pos_pool.shape
+    pages = tables.shape[1]
+    assert h % block_h == 0, (h, block_h)
+    assert bs == block_size and ckv_pool.shape == (nb, bs, lora)
+    assert krope_pool.shape == (nb, bs, dr)
+
+    kernel = functools.partial(_paged_attn_mla_kernel,
+                               block_size=block_size, pages=pages,
+                               scale=float(scale))
+
+    def _pool_idx(bi, hi, ji, tables, qpos):
+        return (jnp.maximum(tables[bi, ji], 0), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # tables, positions
+        grid=(b, h // block_h, pages),
+        in_specs=[
+            pl.BlockSpec((1, block_h, lora),
+                         lambda bi, hi, ji, tables, qpos: (bi, hi, 0)),
+            pl.BlockSpec((1, block_h, dr),
+                         lambda bi, hi, ji, tables, qpos: (bi, hi, 0)),
+            pl.BlockSpec((1, block_size, lora), _pool_idx),
+            pl.BlockSpec((1, block_size, dr), _pool_idx),
+            pl.BlockSpec((1, block_size),
+                         lambda bi, hi, ji, tables, qpos:
+                         (jnp.maximum(tables[bi, ji], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, lora),
+                               lambda bi, hi, ji, tables, qpos:
+                               (bi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_h, 1), jnp.float32),
+            pltpu.VMEM((block_h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lora), jnp.float32),
+        interpret=interpret,
+    )(tables, positions, q_eff, q_rope, ckv_pool, krope_pool, pos_pool)
+
+
+def _paged_prefill_kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, *rest,
+                          block_size: int, pages: int, int8: bool):
+    """Chunked-prefill flash attention over pool blocks: the chunk's C
+    queries (each with its own absolute position) attend over every live
+    slot causally visible to them — prior context AND the already-
+    inserted chunk itself — with per-query masking across the chunk
+    boundary.  Pad query rows (``pos < 0``) see no live slot and yield
+    zeros (``l == 0`` guard)."""
+    if int8:
+        ks_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref = rest
+    else:
+        pos_ref, o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0]                               # [C, bh, rep, d] pre-scaled
+    k = k_ref[0].astype(q.dtype)               # [bs, bh, d]
+    v = v_ref[0].astype(q.dtype)
+    s = jnp.einsum("chrd,khd->chrk", q, k,
+                   preferred_element_type=jnp.float32)   # [C, bh, rep, bs]
+    if int8:
+        s = s * ks_ref[0].T[None, :, None, :]  # [1, bh, 1, bs]
+
+    entry = tables_ref[b, j]
+    q_pos = qpos_ref[0]                        # [C]
+    logical = j * block_size + lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    slot_pos = pos_ref[...]                    # [1, bs]
+    live = (entry >= 0) & (slot_pos == logical)          # [1, bs]
+    ok = live & (slot_pos <= q_pos[:, None])             # [C, bs] causal
+    okb = ok[:, None, None, :]                 # [C, 1, 1, bs]
+    s = jnp.where(okb, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # [C, bh, rep]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + p.sum(axis=-1)
+    if int8:
+        pw = p * vs_ref[0].T[None, :, None, :]
+    else:
+        pw = p
+    pv = jnp.einsum("chrk,khd->chrd", pw.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+
+    @pl.when(j == pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = o_ref[0] / jnp.maximum(l, 1e-30)[..., None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "block_h", "interpret"),
+)
+def paged_prefill_tiled(q, k_pool, v_pool, pos_pool, tables, positions,
+                        k_scale=None, v_scale=None, *, block_size: int,
+                        block_h: int, interpret: bool = False):
+    """Raw tiled chunked-prefill call.
+
+    q: [B, C, Hkv, rep, D] in compute dtype, pre-scaled by the caller;
+    positions: int32 [B, C] (absolute position per chunk token, -1 for
+    pads — pad rows return zeros).  k_scale/v_scale (f32 [NB, BS, Hkv])
+    switch on the int8 dequant fold.  Returns f32 [B, C, Hkv, rep, D].
+    """
+    b, c, hkv, rep, d = q.shape
+    nb, bs = pos_pool.shape
+    pages = tables.shape[1]
+    int8 = k_scale is not None
+    assert hkv % block_h == 0, (hkv, block_h)
+    assert bs == block_size and k_pool.shape[:2] == (nb, bs)
+    assert positions.shape == (b, c)
+
+    kernel = functools.partial(_paged_prefill_kernel, block_size=block_size,
+                               pages=pages, int8=int8)
+
+    def _pool_idx(bi, hi, ji, tables):
+        return (jnp.maximum(tables[bi, ji], 0), 0, hi, 0)
+
+    def _scale_idx(bi, hi, ji, tables):
+        return (jnp.maximum(tables[bi, ji], 0), 0, hi)
+
+    # chunk positions are a regular VMEM input (C can be large), so only
+    # the block tables ride the scalar-prefetch slot
+    in_specs = [
+        pl.BlockSpec((1, c), lambda bi, hi, ji, tables: (bi, 0)),
+        pl.BlockSpec((1, c, block_h, rep, d),
+                     lambda bi, hi, ji, tables: (bi, 0, hi, 0, 0)),
+        pl.BlockSpec((1, block_size, block_h, d), _pool_idx),
+        pl.BlockSpec((1, block_size, block_h, d), _pool_idx),
+    ]
+    args = [jnp.asarray(tables, jnp.int32), positions, q, k_pool, v_pool]
+    if int8:
+        in_specs += [pl.BlockSpec((1, block_size, block_h), _scale_idx),
+                     pl.BlockSpec((1, block_size, block_h), _scale_idx)]
+        args += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec((1, block_size),
+                                 lambda bi, hi, ji, tables:
+                                 (jnp.maximum(tables[bi, ji], 0), 0)))
+    args.append(pos_pool)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # tables only
+        grid=(b, hkv // block_h, pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, c, block_h, rep, d),
+                               lambda bi, hi, ji, tables:
+                               (bi, 0, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c, block_h, rep), jnp.float32),
+            pltpu.VMEM((c, block_h, rep), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hkv, rep, d), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -71,3 +71,115 @@ def paged_decode_ref(q, k_pool, v_pool, pos_pool, tables, positions, *,
                      preferred_element_type=jnp.float32)
     out = out / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, h, d).astype(out_dtype or q.dtype)
+
+
+def paged_decode_int8_ref(q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                          tables, positions, *, scale=None, out_dtype=None):
+    """Gathered int8-KV decode oracle, matching ``decode_attend``'s
+    ordering exactly: bf16 compute, per-slot ``k_scale`` folded into the
+    raw scores BEFORE the softmax, ``v_scale`` folded into the
+    (normalized) probabilities AFTER it.
+
+    q: [B, H, D] float; k_pool/v_pool: int8 [NB, BS, Hkv, D];
+    k_scale/v_scale: f32 [NB, BS, Hkv].
+    """
+    b, h, d = q.shape
+    hkv = k_pool.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    cdt = jnp.bfloat16
+
+    kv = gather_view(k_pool, tables).astype(cdt)        # [B, L, Hkv, D]
+    vv = gather_view(v_pool, tables).astype(cdt)
+    ksv = gather_view(k_scale, tables)                  # [B, L, Hkv] f32
+    vsv = gather_view(v_scale, tables)
+    ok = live_mask(pos_pool, tables, positions)         # [B, L]
+
+    qg = (q.reshape(b, hkv, rep, d).astype(jnp.float32) * scale).astype(cdt)
+    s = jnp.einsum("bhrd,blhd->bhrl", qg, kv,
+                   preferred_element_type=jnp.float32)
+    s = s * ksv.transpose(0, 2, 1)[:, :, None, :]       # dequant fold
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.where(ok[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = p.sum(-1)
+    p = p / jnp.maximum(l, 1e-30)[..., None]            # softmax first …
+    p = p * vsv.transpose(0, 2, 1)[:, :, None, :]       # … then v_scale
+    out = jnp.einsum("bhrl,blhd->bhrd", p.astype(cdt), vv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(out_dtype or q.dtype)
+
+
+def paged_decode_mla_ref(q_eff, q_rope, ckv_pool, krope_pool, pos_pool,
+                         tables, positions, *, scale):
+    """Gathered MLA absorbed-decode oracle.
+
+    q_eff: f32 [B, H, lora]; q_rope: f32 [B, H, rope_dim]; latent pools
+    [NB, BS, lora] / [NB, BS, rope_dim].  Returns the latent context,
+    f32 [B, H, lora] (the caller applies ``w_uv``).
+    """
+    ckv = gather_view(ckv_pool, tables).astype(jnp.float32)   # [B, L, lora]
+    kr = gather_view(krope_pool, tables).astype(jnp.float32)  # [B, L, dr]
+    ok = live_mask(pos_pool, tables, positions)               # [B, L]
+
+    s = (jnp.einsum("bhl,bkl->bhk", q_eff, ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bkr->bhk", q_rope, kr,
+                      preferred_element_type=jnp.float32)) * scale
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.where(ok[:, None, :], jnp.exp(s - m), 0.0)
+    l = p.sum(-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhk,bkl->bhl", p, ckv,
+                      preferred_element_type=jnp.float32)
+
+
+def paged_prefill_ref(q, k_pool, v_pool, pos_pool, tables, positions, *,
+                      scale=None, k_scale=None, v_scale=None,
+                      out_dtype=None):
+    """Gathered chunked-prefill oracle: per-query causal full softmax
+    over the pool view.  Pad query rows (``positions < 0``) see no live
+    slot and return zeros — matching the kernel's ``l == 0`` guard, NOT
+    ``blockwise_attention``'s mean-of-v garbage on pads (both are
+    discarded downstream).
+
+    q: [B, C, H, D]; positions: int32 [B, C].  With ``k_scale`` /
+    ``v_scale`` the int8 fold uses the fused kernel's ordering (scales
+    applied to f32 scores / probabilities).
+    """
+    b, c, h, d = q.shape
+    hkv = k_pool.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    int8 = k_scale is not None
+    cdt = jnp.bfloat16 if int8 else k_pool.dtype
+
+    kv = gather_view(k_pool, tables).astype(cdt)        # [B, L, Hkv, D]
+    vv = gather_view(v_pool, tables).astype(cdt)
+    bsz = pos_pool.shape[1]
+    pages = tables.shape[1]
+    vpos = gather_view(pos_pool, tables)                # [B, L]
+    iota = jnp.arange(pages * bsz, dtype=jnp.int32)[None]
+    live = jnp.repeat(tables >= 0, bsz, axis=1) & (vpos == iota)
+    ok = live[:, None, :] & (vpos[:, None, :] <= positions[:, :, None])
+
+    qg = (q.reshape(b, c, hkv, rep, d).astype(jnp.float32) * scale
+          ).astype(cdt)
+    s = jnp.einsum("bchrd,blhd->bchrl", qg, kv,
+                   preferred_element_type=jnp.float32)
+    if int8:
+        ksv = gather_view(k_scale, tables)              # [B, L, Hkv]
+        s = s * ksv.transpose(0, 2, 1)[:, None, :, None, :]
+    okb = ok[:, :, None, None, :]
+    s = jnp.where(okb, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.where(okb, jnp.exp(s - m), 0.0)
+    l = p.sum(-1)
+    p = p / jnp.maximum(l, 1e-30)[..., None]
+    if int8:
+        vsv = gather_view(v_scale, tables)
+        p = p * vsv.transpose(0, 2, 1)[:, None, :, None, :]
+    out = jnp.einsum("bchrl,blhd->bchrd", p.astype(cdt), vv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, h, d).astype(out_dtype or q.dtype)

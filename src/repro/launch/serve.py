@@ -23,10 +23,13 @@ Default engine is the paged-KV engine (block pool + chunked-prefill
 scheduler + streaming + metrics); ``--engine slots`` falls back to the
 contiguous fixed-slot engine (required for SSM/hybrid, enc-dec and
 sliding-window models, which the paged cache does not cover).
-``--paged-kernel`` picks the paged decode-attention path: ``auto``
-(fused Pallas kernel where hardware-native), ``fused`` (force the
-kernel, interpret mode off-TPU) or ``gather`` (the paged_view
-fallback); unsupported variants (int8-KV, MLA) always gather.
+``--paged-kernel`` picks the paged attention paths: ``auto`` (fused
+Pallas kernels where hardware-native), ``fused`` (force the kernels,
+interpret mode off-TPU) or ``gather`` (the paged_view fallback).  The
+fused coverage spans float, int8-KV (per-slot scales folded in-kernel)
+and MLA-latent decode plus float/int8-KV chunked prefill; the paths
+resolve per variant (MLA prefill still gathers for its decompressing
+``kv_map_fn``) and are printed as ``decode path`` / ``prefill path``.
 
 ``--prefix-cache on|off`` (default: on for the paged engine) shares KV
 blocks across requests with a common block-aligned prompt prefix —
@@ -150,12 +153,13 @@ def main():
                     help="[paged engine] concurrent sequences")
     ap.add_argument("--paged-kernel", default="auto",
                     choices=["auto", "fused", "gather"],
-                    help="[paged engine] decode attention path: fused "
-                         "Pallas paged-attention kernel (auto: only where "
-                         "hardware-native; fused: force, interpret mode "
-                         "off-TPU) vs the gathered paged_view fallback; "
-                         "unsupported variants (int8-KV, MLA) always "
-                         "fall back to gather")
+                    help="[paged engine] paged attention path: fused "
+                         "Pallas kernels (auto: only where hardware-"
+                         "native; fused: force, interpret mode off-TPU) "
+                         "vs the gathered paged_view fallback.  Fused "
+                         "covers float/int8-KV/MLA decode and float/"
+                         "int8-KV chunked prefill; the remaining gaps "
+                         "(MLA prefill) negotiate down per variant")
     ap.add_argument("--prefix-cache", default=None,
                     choices=["on", "off"],
                     help="[paged engine] share KV blocks across requests "
@@ -351,7 +355,8 @@ def main():
                                prefix_cache=args.prefix_cache != "off",
                                mesh=mesh, tracer=tracer)
         print(f"[launch.serve] paged-kernel={args.paged_kernel} -> "
-              f"decode path: {eng.decode_path}")
+              f"decode path: {eng.decode_path}  "
+              f"prefill path: {eng.prefill_path}")
     else:
         eng = ServeEngine(model, params, slots=args.slots,
                           cache_len=args.cache_len,
@@ -389,6 +394,10 @@ def main():
         print(f"[launch.serve] decode path={pk['path']}  KV bytes/token: "
               f"fused={pk['kv_bytes_per_token_fused']:.0f} "
               f"gathered={pk['kv_bytes_per_token_gathered']:.0f}")
+        print(f"[launch.serve] prefill path={pk['prefill_path']}  "
+              f"KV bytes/prefill token: "
+              f"fused={pk['kv_bytes_per_prefill_token_fused']:.0f} "
+              f"gathered={pk['kv_bytes_per_prefill_token_gathered']:.0f}")
         if eng.prefix is not None:
             pc = s["prefix_cache"]
             print(f"[launch.serve] prefix cache: hit-rate "

@@ -274,11 +274,16 @@ def empty_pos(pos_like):
 # cache to the attention math.
 #
 # Decode (S == 1) does not need the gathered view at all: the fused
-# Pallas kernel (``kernels/paged_attention``) applies the identical
+# Pallas kernels (``kernels/paged_attention``) apply the identical
 # liveness mask inside the kernel while reading pool blocks directly
-# through the block table, so ``paged_view`` is only materialized on
-# the chunked-prefill path and on fallback variants (int8-KV, MLA,
-# sliding-window) — see ``paged_decode_attend``.
+# through the block table — float, int8 (per-slot scales ride the same
+# block DMA) and MLA-latent pools all run fused.  Chunked prefill
+# (S > 1) has its own fused kernel reading prior context straight from
+# the pool with per-query causal masking, so ``paged_view`` is only
+# materialized on the remaining gathered fallbacks: sliding-window
+# masking, mesh-indivisible head counts, and MLA *prefill* (which needs
+# the decompressing ``kv_map_fn``) — see ``paged_decode_attend`` /
+# ``paged_prefill_attend`` / ``mla_paged_decode_attend``.
 
 
 def is_paged(cache: dict) -> bool:
@@ -447,8 +452,8 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
                                      "k_scale": ks, "v_scale": vs}, cache_at)
         if s == 1:
             if is_paged(cache):
-                # int8 pools are a gathered-fallback variant inside the
-                # router (the fused kernel has no scale fold yet)
+                # the router's fused int8 kernel folds the per-slot
+                # scales in-kernel (decode_attend's ordering)
                 out = paged_decode_attend(q, cache, positions,
                                           window=cfg.sliding_window,
                                           mode=cfg.paged_kernel)
@@ -456,16 +461,12 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
                 out = decode_attend(q, cache, positions,
                                     window=cfg.sliding_window)
         elif is_paged(cache):
-            # chunked prefill: earlier chunks are only in the cache, so
-            # attend over the dequantized view (unlike the whole-prompt
-            # path below, the cache is NOT empty here)
-            kv = paged_view(cache)
-            kd = (kv["k"].astype(jnp.float32)
-                  * kv["k_scale"][..., None]).astype(k.dtype)
-            vd = (kv["v"].astype(jnp.float32)
-                  * kv["v_scale"][..., None]).astype(v.dtype)
-            out = blockwise_attention(q, kd, vd, positions, kv["pos"],
-                                      causal=True)
+            # chunked prefill: earlier chunks are only in the cache
+            # (unlike the whole-prompt path below, the cache is NOT
+            # empty here) — the router reads pool blocks directly and
+            # dequantizes in-kernel, or gathers + dequantizes the view
+            out = paged_prefill_attend(q, cache, positions,
+                                       mode=cfg.paged_kernel)
         else:
             # prefill: attend over the fresh bf16 K/V (the cache was empty,
             # so causal/windowed attention over the prompt is equivalent) —
@@ -484,10 +485,13 @@ def gqa_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
             out = decode_attend(q, cache, positions, window=cfg.sliding_window)
     else:
         cache = cache_insert(cache, {"k": k, "v": v}, cache_at)
-        kv = paged_view(cache) if is_paged(cache) else cache
-        out = blockwise_attention(q, kv["k"], kv["v"], positions,
-                                  kv["pos"], causal=True,
-                                  window=cfg.sliding_window)
+        if is_paged(cache):
+            out = paged_prefill_attend(q, cache, positions,
+                                       mode=cfg.paged_kernel)
+        else:
+            out = blockwise_attention(q, cache["k"], cache["v"], positions,
+                                      cache["pos"], causal=True,
+                                      window=cfg.sliding_window)
     out = out.reshape(b, s, h * hd)
     out = linear_apply(params["o"], out, backend=backend)
     return (out, cache) if cache is not None else out
@@ -597,41 +601,82 @@ def _fused_selected(mode: str, supported: bool) -> bool:
     return mode == "fused" or jax.default_backend() == "tpu"
 
 
+def _paged_cache_caps(cache: dict, n_heads: int) -> dict:
+    """The capability axes of a paged cache leaf, as the ``caps`` kwargs
+    for ``tune.dispatch.kernel_unsupported_reason``.  MLA latent pools
+    (``ckv`` leaf) probe with ``latent=True`` and kv heads == q heads
+    (no replication in the absorbed formulation — heads are
+    embarrassingly parallel over latent blocks)."""
+    if "ckv" in cache:
+        return dict(n_kv_heads=n_heads, kv_dtype=cache["ckv"].dtype,
+                    latent=True)
+    return dict(n_kv_heads=cache["k"].shape[2], kv_dtype=cache["k"].dtype,
+                latent=False)
+
+
 def fused_paged_supported(cache: dict, n_heads: int, *, window: int = 0,
-                          tp: int = 1) -> bool:
-    """Can the fused Pallas kernel serve a decode step on this paged
-    cache leaf?  MLA latent caches (no ``k``/``v`` leaves), int8-KV
-    pools, sliding-window masking and head counts that don't divide a
-    ``tp``-way model mesh fall back to the gathered path — the
-    capability boundary lives in ``tune.dispatch.kernel_supports``.
+                          tp: int = 1,
+                          kernel: str = "paged_attention") -> bool:
+    """Can a fused Pallas kernel serve this paged cache leaf?  Float,
+    int8 (per-slot scale fold) and MLA-latent pools are covered for
+    decode; float and int8 for chunked prefill
+    (``kernel="paged_prefill"``).  Sliding-window masking, head counts
+    that don't divide a ``tp``-way model mesh, and MLA prefill fall back
+    to the gathered path — the capability boundary (and the per-cap
+    fallback reason) lives in ``tune.dispatch.kernel_unsupported_reason``.
     """
-    from repro.tune.dispatch import kernel_supports
-    if not is_paged(cache) or "k" not in cache:
+    from repro.tune.dispatch import kernel_unsupported_reason
+    if not is_paged(cache):
         return False
     bs = cache["pos"].shape[1]
     pages = cache["block_tables"].shape[-1]
-    return kernel_supports(
-        "paged_attention", m=n_heads, n=pages * bs, group_size=bs,
-        n_kv_heads=cache["k"].shape[2], kv_dtype=cache["k"].dtype,
-        window=window, tp=tp)
+    return kernel_unsupported_reason(
+        kernel, m=n_heads, n=pages * bs, group_size=bs, window=window,
+        tp=tp, **_paged_cache_caps(cache, n_heads)) is None
+
+
+def _cfg_paged_caps(cfg) -> dict:
+    """Config-level mirror of :func:`_paged_cache_caps` (for the host-
+    side mode resolvers, which have no cache leaf to inspect)."""
+    if cfg.attention == "mla":
+        return dict(n_kv_heads=cfg.n_heads, kv_dtype=cfg.dtype, latent=True)
+    return dict(n_kv_heads=cfg.n_kv_heads * cfg.kv_replication,
+                kv_dtype="int8" if cfg.kv_cache_bits == 8 else cfg.dtype,
+                latent=False)
 
 
 def paged_kernel_mode(cfg, *, block_size: int, pages: int,
                       tp: int = 1) -> str:
     """Host-side mirror of the decode routing decision: resolve
     ``cfg.paged_kernel`` to the path ("fused" | "gather") a decode step
-    on this config's paged cache will actually take.  Used by the serve
-    engine for labeling and KV-bandwidth accounting — the device-side
-    decision in :func:`paged_decode_attend` follows the same rule.
-    ``tp`` is the model-axis extent when serving over a mesh (the fused
-    kernel then launches per-shard via ``shard_map``)."""
+    on this config's paged cache will actually take — PER VARIANT, so
+    an int8-KV or MLA config reports "fused" iff its own kernel variant
+    really runs (no silent "fused" label on a gathered step).  Used by
+    the serve engine for labeling and KV-bandwidth accounting — the
+    device-side decisions in :func:`paged_decode_attend` /
+    :func:`mla_paged_decode_attend` follow the same rule.  ``tp`` is the
+    model-axis extent when serving over a mesh (the fused kernel then
+    launches per-shard via ``shard_map``)."""
     from repro.tune.dispatch import kernel_supports
     ok = kernel_supports(
         "paged_attention", m=cfg.n_heads, n=pages * block_size,
-        group_size=block_size,
-        n_kv_heads=cfg.n_kv_heads * cfg.kv_replication,
-        kv_dtype="int8" if cfg.kv_cache_bits == 8 else cfg.dtype,
-        window=cfg.sliding_window, latent=cfg.attention == "mla", tp=tp)
+        group_size=block_size, window=cfg.sliding_window, tp=tp,
+        **_cfg_paged_caps(cfg))
+    return "fused" if _fused_selected(cfg.paged_kernel, ok) else "gather"
+
+
+def paged_prefill_mode(cfg, *, block_size: int, pages: int,
+                       tp: int = 1) -> str:
+    """Host-side mirror of the CHUNKED-PREFILL routing decision —
+    :func:`paged_kernel_mode`'s counterpart for ``paged_prefill_attend``.
+    MLA prefill always resolves to "gather" (the latent blocks must be
+    decompressed through ``kv_map_fn``, which the prefill kernel does
+    not fold)."""
+    from repro.tune.dispatch import kernel_supports
+    ok = kernel_supports(
+        "paged_prefill", m=cfg.n_heads, n=pages * block_size,
+        group_size=block_size, window=cfg.sliding_window, tp=tp,
+        **_cfg_paged_caps(cfg))
     return "fused" if _fused_selected(cfg.paged_kernel, ok) else "gather"
 
 
@@ -648,9 +693,9 @@ def paged_decode_attend(q, cache, positions, *, window=0, scale=None,
 
     mode: "auto" (fused only where it is the hardware-native path, i.e.
     on TPU), "fused" (force the kernel; interpret mode off-TPU), or
-    "gather".  Variants the kernel does not cover (int8-KV, MLA,
-    sliding-window, mesh-indivisible head counts) fall back to the
-    gathered path in every mode.
+    "gather".  int8-KV pools route to the scale-folding kernel variant.
+    Variants no kernel covers (sliding-window, mesh-indivisible head
+    counts) fall back to the gathered path in every mode.
 
     Inside a :func:`paged_shard_scope` the kernel launches per
     model-shard through ``shard_map``: the pool's kv-head slice stays
@@ -663,33 +708,154 @@ def paged_decode_attend(q, cache, positions, *, window=0, scale=None,
                                                       window=window, tp=tp))
     if use:
         from repro.core.lut_gemm import INTERPRET
-        from repro.kernels.paged_attention import paged_attention
+        from repro.kernels.paged_attention import (paged_attention,
+                                                   paged_attention_int8)
+        int8 = cache["k"].dtype == jnp.int8
+        if int8:
+            fn = functools.partial(paged_attention_int8, scale=scale,
+                                   interpret=INTERPRET)
+            args = (q[:, 0], cache["k"], cache["v"], cache["k_scale"],
+                    cache["v_scale"], cache["pos"], cache["block_tables"],
+                    positions[:, 0])
+        else:
+            fn = functools.partial(paged_attention, scale=scale,
+                                   interpret=INTERPRET)
+            args = (q[:, 0], cache["k"], cache["v"], cache["pos"],
+                    cache["block_tables"], positions[:, 0])
         if mesh is not None:
             from jax.sharding import PartitionSpec as P
             from repro.parallel.sharding import shard_map_compat
             dax = "data" if _PAGED_SHARD["shard_batch"] else None
-            fn = functools.partial(paged_attention, scale=scale,
-                                   interpret=INTERPRET)
+            pool = P(None, None, "model", None)
+            scl = P(None, None, "model")        # scale pools [NB, BS, Hkv]
+            in_specs = (P(dax, "model", None),  # q [B, H, D]
+                        pool, pool) \
+                + ((scl, scl) if int8 else ()) \
+                + (P(None, None),               # pos pool
+                   P(dax, None),                # block tables
+                   P(dax))                      # positions
             out3 = shard_map_compat(
-                fn, mesh,
-                in_specs=(P(dax, "model", None),        # q [B, H, D]
-                          P(None, None, "model", None),  # k pool
-                          P(None, None, "model", None),  # v pool
-                          P(None, None),                 # pos pool
-                          P(dax, None),                  # block tables
-                          P(dax)),                       # positions
-                out_specs=P(dax, "model", None))(
-                q[:, 0], cache["k"], cache["v"], cache["pos"],
-                cache["block_tables"], positions[:, 0])
+                fn, mesh, in_specs=in_specs,
+                out_specs=P(dax, "model", None))(*args)
             return out3[:, None]
-        out = paged_attention(
-            q[:, 0], cache["k"], cache["v"], cache["pos"],
-            cache["block_tables"], positions[:, 0], scale=scale,
-            interpret=INTERPRET)
+        out = fn(*args)
         out = shard_act(out[:, None], ("batch", None, "heads", None))
         return out
     kv = paged_view(cache)
     return decode_attend(q, kv, positions, window=window, scale=scale)
+
+
+def mla_paged_decode_attend(q_eff, q_rope, cache, positions, *, scale,
+                            mode="auto"):
+    """Absorbed MLA decode on a PAGED latent cache.
+
+    q_eff: f32 [B, 1, H, lora] (``w_uk`` already absorbed); q_rope:
+    [B, 1, H, rope_dim].  Returns the latent context [B, 1, H, lora] —
+    the caller applies ``w_uv``.  When the fused kernel is selected the
+    latent blocks are read straight from the pool (scores in latent
+    space, the ``kv_map_fn`` decompression folded away by absorption)
+    and ``paged_view`` is never materialized; otherwise: gather + the
+    absorbed reference math.
+    """
+    mesh = _PAGED_SHARD["mesh"]
+    tp = _PAGED_SHARD["tp"] if mesh is not None else 1
+    h = q_eff.shape[2]
+    use = _fused_selected(mode, fused_paged_supported(cache, h, tp=tp))
+    if use:
+        from repro.core.lut_gemm import INTERPRET
+        from repro.kernels.paged_attention import paged_attention_mla
+        fn = functools.partial(paged_attention_mla, scale=float(scale),
+                               interpret=INTERPRET)
+        args = (q_eff[:, 0], q_rope[:, 0].astype(jnp.float32),
+                cache["ckv"], cache["krope"], cache["pos"],
+                cache["block_tables"], positions[:, 0])
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from repro.parallel.sharding import shard_map_compat
+            dax = "data" if _PAGED_SHARD["shard_batch"] else None
+            # latent pools have no heads dim: they ride replicated (the
+            # paged pool nulls the contiguous cache's "kv_seq" sharding —
+            # see model.paged_cache_axes) and the QUERY heads shard
+            ctx3 = shard_map_compat(
+                fn, mesh,
+                in_specs=(P(dax, "model", None),   # q_eff [B, H, lora]
+                          P(dax, "model", None),   # q_rope [B, H, dr]
+                          P(None, None, None),     # ckv pool
+                          P(None, None, None),     # krope pool
+                          P(None, None),           # pos pool
+                          P(dax, None),            # block tables
+                          P(dax)),                 # positions
+                out_specs=P(dax, "model", None))(*args)
+            return ctx3[:, None]
+        return fn(*args)[:, None]
+    kv = paged_view(cache)
+    return _mla_absorbed_ctx(q_eff, q_rope, kv["ckv"], kv["krope"],
+                             kv["pos"], positions, scale)
+
+
+def paged_prefill_attend(q, cache, positions, *, scale=None, mode="auto"):
+    """Chunked-prefill attention on a PAGED cache (current chunk already
+    inserted into the pool).
+
+    q: [B, C, H, D]; positions: int32 [B, C] (-1 on pad rows).  When the
+    fused kernel is selected, the chunk's queries attend over prior
+    context straight from the block pool (scalar-prefetched block-table
+    indexing, per-query causal masking across the chunk boundary, int8
+    scales folded in-kernel) and ``paged_view`` is never materialized.
+    Otherwise: gather + ``blockwise_attention``, the reference path.
+    Pad query rows differ harmlessly between the two (kernel: zeros;
+    blockwise: unnormalized garbage) — both are discarded downstream.
+    """
+    mesh = _PAGED_SHARD["mesh"]
+    tp = _PAGED_SHARD["tp"] if mesh is not None else 1
+    use = _fused_selected(mode, fused_paged_supported(
+        cache, q.shape[2], tp=tp, kernel="paged_prefill"))
+    if use:
+        from repro.core.lut_gemm import INTERPRET
+        from repro.kernels.paged_attention import paged_prefill
+        int8 = cache["k"].dtype == jnp.int8
+        fn = functools.partial(paged_prefill, scale=scale,
+                               interpret=INTERPRET)
+        args = (q, cache["k"], cache["v"], cache["pos"],
+                cache["block_tables"], positions) \
+            + ((cache["k_scale"], cache["v_scale"]) if int8 else ())
+        if int8:
+            fn = functools.partial(
+                lambda q_, k_, v_, p_, t_, pos_, ks_, vs_, **kw:
+                paged_prefill(q_, k_, v_, p_, t_, pos_,
+                              k_scale=ks_, v_scale=vs_, **kw),
+                scale=scale, interpret=INTERPRET)
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from repro.parallel.sharding import shard_map_compat
+            # prefill runs one sequence's chunk at a time (B=1), which a
+            # data axis > 1 cannot split — replicate unless B divides
+            dax = "data" if (_PAGED_SHARD["shard_batch"]
+                             and q.shape[0] % dict(mesh.shape).get(
+                                 "data", 1) == 0) else None
+            pool = P(None, None, "model", None)
+            scl = P(None, None, "model")
+            in_specs = (P(dax, None, "model", None),  # q [B, C, H, D]
+                        pool, pool,
+                        P(None, None),                # pos pool
+                        P(dax, None),                 # block tables
+                        P(dax, None)) \
+                + ((scl, scl) if int8 else ())        # scale pools
+            out = shard_map_compat(
+                fn, mesh, in_specs=in_specs,
+                out_specs=P(dax, None, "model", None))(*args)
+            return out
+        return shard_act(fn(*args), ("batch", None, "heads", None))
+    kv = paged_view(cache)
+    if cache["k"].dtype == jnp.int8:
+        kd = (kv["k"].astype(jnp.float32)
+              * kv["k_scale"][..., None]).astype(q.dtype)
+        vd = (kv["v"].astype(jnp.float32)
+              * kv["v_scale"][..., None]).astype(q.dtype)
+        return blockwise_attention(q, kd, vd, positions, kv["pos"],
+                                   causal=True, scale=scale)
+    return blockwise_attention(q, kv["k"], kv["v"], positions, kv["pos"],
+                               causal=True, scale=scale)
 
 
 def cross_kv(params, cfg, enc_out, backend=None):
@@ -726,6 +892,26 @@ def _rms(x, scale, eps=1e-6):
     xf = x.astype(jnp.float32)
     y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps) * scale
     return y.astype(x.dtype)
+
+
+def _mla_absorbed_ctx(q_eff, q_rope, ckv_all, krope_all, kpos, positions,
+                      scale):
+    """Gathered/contiguous absorbed-decode math: latent-space scores +
+    softmax + latent context.  q_eff: f32 [B, 1, H, lora]; returns
+    [B, 1, H, lora] f32 (the caller applies ``w_uv``).  The mask relies
+    on ``kpos`` being -1 on every non-live slot (``paged_view`` sets
+    this for paged caches; contiguous caches store -1 on empty slots).
+    """
+    sc = jnp.einsum("bshl,bkl->bshk", q_eff, ckv_all.astype(jnp.float32))
+    sc = sc + jnp.einsum("bshr,bkr->bshk", q_rope.astype(jnp.float32),
+                         krope_all.astype(jnp.float32))
+    sc = sc * scale
+    # mask: slot occupied and slot position <= current decode position
+    m = (kpos >= 0)[:, None, None, :] & \
+        (kpos[:, None, None, :] <= positions[:, 0][:, None, None, None])
+    sc = jnp.where(m, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bshk,bkl->bshl", p, ckv_all.astype(jnp.float32))
 
 
 def mla_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
@@ -768,26 +954,30 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_at=None,
 
     if cache is not None:
         cache = cache_insert(cache, {"ckv": ckv, "krope": krope}, cache_at)
-        kv = paged_view(cache) if is_paged(cache) else cache
-        ckv_all, krope_all, kpos = kv["ckv"], kv["krope"], kv["pos"]
-    else:
-        ckv_all, krope_all, kpos = ckv, krope, positions
 
     if s == 1 and cache is not None:
         # ---- absorbed decode: O(L * lora) per step -------------------
         q_eff = jnp.einsum("bshn,hnl->bshl", q_nope.astype(jnp.float32), w_uk)
-        sc = jnp.einsum("bshl,bkl->bshk", q_eff, ckv_all.astype(jnp.float32))
-        sc = sc + jnp.einsum("bshr,bkr->bshk", q_rope.astype(jnp.float32),
-                             krope_all.astype(jnp.float32))
-        sc = sc * scale
-        # mask: slot occupied and slot position <= current decode position
-        m = (kpos >= 0)[:, None, None, :] & \
-            (kpos[:, None, None, :] <= positions[:, 0][:, None, None, None])
-        sc = jnp.where(m, sc, NEG_INF)
-        p = jax.nn.softmax(sc, axis=-1)
-        ctx = jnp.einsum("bshk,bkl->bshl", p, ckv_all.astype(jnp.float32))
+        if is_paged(cache):
+            # the router reads latent blocks straight from the pool when
+            # the fused MLA kernel is selected (no gathered view)
+            ctx = mla_paged_decode_attend(q_eff, q_rope, cache, positions,
+                                          scale=scale,
+                                          mode=cfg.paged_kernel)
+        else:
+            ctx = _mla_absorbed_ctx(q_eff, q_rope, cache["ckv"],
+                                    cache["krope"], cache["pos"],
+                                    positions, scale)
         out = jnp.einsum("bshl,hvl->bshv", ctx, w_uv)          # [B,1,H,dv]
     else:
+        if cache is not None:
+            # MLA prefill stays on the gathered view: the latent blocks
+            # must be decompressed through kv_map_fn (W_uk/W_uv per
+            # block), which the fused prefill kernel does not fold
+            kv = paged_view(cache) if is_paged(cache) else cache
+            ckv_all, krope_all, kpos = kv["ckv"], kv["krope"], kv["pos"]
+        else:
+            ckv_all, krope_all, kpos = ckv, krope, positions
         # ---- prefill/train: decompress per KV block ------------------
         def kv_map(latent_blk, _):
             c, kr = latent_blk[..., :lora], latent_blk[..., lora:]

@@ -253,3 +253,20 @@ def record_kernel_config(kernel: str, source: str, config, **meta) -> None:
     t.instant(f"kernel_config:{kernel}", track="engine/kernel",
               cat="kernel", kernel=kernel, source=source,
               config=config.to_dict(), **meta)
+
+
+def record_kernel_unsupported(kernel: str, reason: str, **meta) -> None:
+    """Record one failed capability negotiation on the active tracer.
+
+    Called by ``tune.dispatch.kernel_unsupported_reason`` when a probe
+    rejects a kernel for a problem, with the SPECIFIC cap that failed
+    (``"window"``, ``"kv_dtype"``, ``"latent"``, ``"tp"``, ...) — so a
+    trace of a gathered-fallback run says *why* it gathered instead of
+    collapsing every reason into one boolean.  No-op without an active
+    tracer.
+    """
+    t = _ACTIVE
+    if t is None:
+        return
+    t.instant(f"kernel_unsupported:{kernel}", track="engine/kernel",
+              cat="kernel", kernel=kernel, reason=reason, **meta)

@@ -179,12 +179,17 @@ class PagedServeEngine:
     exceed ``max_batch`` worst-case reservations by the pool ratio.
 
     ``paged_kernel`` ("auto" | "fused" | "gather", default: the model
-    config's setting) picks the decode attention path: the fused Pallas
-    kernel reads live pool blocks directly through the block table,
+    config's setting) picks the paged attention paths: the fused Pallas
+    kernels read live pool blocks directly through the block table —
+    decode for float, int8-KV (per-slot scale rows ride the same DMA)
+    and MLA latent pools, chunked prefill for float and int8-KV pools —
     while "gather" materializes the contiguous ``paged_view`` per layer
-    (the reference path).  The resolved path is ``self.decode_path`` and
-    both paths' analytic KV traffic is tracked per decode step in
-    ``metrics`` (``kv_bytes_per_token_{fused,gathered}``).
+    (the reference path).  The paths are resolved PER VARIANT:
+    ``self.decode_path`` and ``self.prefill_path`` can differ (MLA
+    decodes fused but prefills gathered, for the decompressing
+    ``kv_map_fn``), and both paths' analytic KV traffic is tracked per
+    step in ``metrics`` (``kv_bytes_per_token_{fused,gathered}``,
+    ``kv_bytes_per_prefill_token_{fused,gathered}``).
 
     ``prefix_cache=True`` turns on prefix caching: fully-written prompt
     blocks are indexed by their token content and later requests with
@@ -228,7 +233,9 @@ class PagedServeEngine:
                  prefix_cache: bool = False,
                  mesh=None, shard_rules: Optional[dict] = None,
                  clock=time.perf_counter, tracer=None):
-        from repro.models.attention import kv_entry_bytes, paged_kernel_mode
+        from repro.models.attention import (kv_entry_bytes,
+                                            paged_kernel_mode,
+                                            paged_prefill_mode)
         if paged_kernel is not None and paged_kernel != model.cfg.paged_kernel:
             # the mode is part of the (jitted) decode graph, so it lives
             # on the config; an engine-level override rebuilds the Model
@@ -253,6 +260,13 @@ class PagedServeEngine:
         self.decode_path = paged_kernel_mode(
             model.cfg, block_size=block_size, pages=self.max_blocks_per_seq,
             tp=self._tp)
+        self.prefill_path = paged_prefill_mode(
+            model.cfg, block_size=block_size, pages=self.max_blocks_per_seq,
+            tp=self._tp)
+        # per-entry bytes INCLUDING the int8 pools' per-slot scale rows:
+        # fused int8 decode/prefill DMA the scales alongside each block,
+        # and the gathered view materializes them too, so both traffic
+        # estimates must count them (see attention.kv_entry_bytes)
         self._kv_entry_bytes = kv_entry_bytes(model.cfg)
         # tracing: hooks below run unconditionally against a NullTracer
         # when tracing is off (attach_tracer swaps in a live one).  The
@@ -448,6 +462,22 @@ class PagedServeEngine:
         fused = live * per_layer * layers
         gathered = 3 * self.max_batch * self.max_blocks_per_seq \
             * per_layer * layers
+        return fused, gathered
+
+    def _prefill_kv_bytes(self, seq) -> tuple:
+        """Analytic per-chunk KV traffic of both prefill paths (bytes).
+
+        fused: the chunked-prefill flash kernel streams the sequence's
+        own table-mapped blocks once per layer (int8 scale rows ride the
+        same DMA and are part of ``_kv_entry_bytes``).
+        gathered: the 1-row ``paged_view`` reads the row's full
+        ``max_blocks_per_seq`` capacity, writes the contiguous view and
+        ``blockwise_attention`` reads it back — 3 view-sized copies per
+        layer.  Same traffic model as ``_decode_kv_bytes``."""
+        per_layer = self.block_size * self._kv_entry_bytes
+        layers = self.model.cfg.n_layers
+        fused = len(seq.table) * per_layer * layers
+        gathered = 3 * self.max_blocks_per_seq * per_layer * layers
         return fused, gathered
 
     def _request_key(self, req: Request, index: int):
@@ -646,7 +676,9 @@ class PagedServeEngine:
         self.trace.instant("prefill_chunk", track=req_track(seq.uid),
                            cat="request", uid=seq.uid, start=start,
                            length=clen)
-        self.metrics.on_prefill_chunk()
+        fused_b, gathered_b = self._prefill_kv_bytes(seq)
+        self.metrics.on_prefill_chunk(clen, fused_b, gathered_b,
+                                      self.prefill_path)
         seq.kv_len += clen
         return logits, seq
 

@@ -86,9 +86,12 @@ class ServeMetrics:
         self.counters = {"submitted": 0, "admitted": 0, "completed": 0,
                          "failed": 0, "preempted": 0, "rejected": 0,
                          "cancelled": 0, "deadline_expired": 0,
-                         "tokens_out": 0, "prefill_chunks": 0, "ticks": 0,
+                         "tokens_out": 0, "prefill_chunks": 0,
+                         "prefill_tokens": 0, "ticks": 0,
                          "decode_steps": 0, "decode_tokens": 0,
                          "kv_bytes_fused_est": 0, "kv_bytes_gathered_est": 0,
+                         "prefill_kv_bytes_fused_est": 0,
+                         "prefill_kv_bytes_gathered_est": 0,
                          "prefix_lookups": 0, "prefix_hit_requests": 0,
                          "prefix_queried_blocks": 0, "prefix_hit_blocks": 0,
                          "prefix_tokens_saved": 0, "prefix_cow_events": 0,
@@ -102,6 +105,7 @@ class ServeMetrics:
         # would hide mixed fused/gather runs (e.g. a capability
         # negotiation change mid-run), so count per path and report both
         self.decode_path_steps: Dict[str, int] = {}
+        self.prefill_path_chunks: Dict[str, int] = {}
         self.occupancy: List[float] = []       # one sample per tick
         self.active: List[int] = []            # concurrent running seqs
         self.sharing: List[float] = []         # logical/physical blocks
@@ -209,8 +213,23 @@ class ServeMetrics:
         if prefix_evictions is not None:
             self.counters["prefix_evictions"] = int(prefix_evictions)
 
-    def on_prefill_chunk(self) -> None:
+    def on_prefill_chunk(self, tokens: int = 0, fused_bytes: int = 0,
+                         gathered_bytes: int = 0,
+                         path: Optional[str] = None) -> None:
+        """One chunked-prefill dispatch: ``tokens`` is the chunk length,
+        plus the analytic KV traffic of BOTH prefill attention paths for
+        this chunk — the fused flash kernel streams only the sequence's
+        own table-mapped blocks (scale rows included on int8 pools),
+        while the gathered path materializes k/v/pos views over the full
+        per-sequence capacity.  ``path`` is the one actually taken; the
+        legacy zero-argument form just counts the chunk."""
         self.counters["prefill_chunks"] += 1
+        self.counters["prefill_tokens"] += int(tokens)
+        self.counters["prefill_kv_bytes_fused_est"] += int(fused_bytes)
+        self.counters["prefill_kv_bytes_gathered_est"] += int(gathered_bytes)
+        if path is not None:
+            self.prefill_path_chunks[path] = \
+                self.prefill_path_chunks.get(path, 0) + 1
 
     def on_decode_step(self, tokens: int, fused_bytes: int,
                        gathered_bytes: int, path: str) -> None:
@@ -234,6 +253,16 @@ class ServeMetrics:
             return None
         if len(self.decode_path_steps) == 1:
             return next(iter(self.decode_path_steps))
+        return "mixed"
+
+    @property
+    def prefill_path(self) -> Optional[str]:
+        """The single prefill-attention path taken, or ``"mixed"``
+        (``prefill_path_chunks`` has the per-path chunk counts)."""
+        if not self.prefill_path_chunks:
+            return None
+        if len(self.prefill_path_chunks) == 1:
+            return next(iter(self.prefill_path_chunks))
         return "mixed"
 
     def throughput(self) -> float:
@@ -262,6 +291,7 @@ class ServeMetrics:
         act = np.asarray(self.active) if self.active else np.zeros(1)
         shr = np.asarray(self.sharing) if self.sharing else np.ones(1)
         ndec = max(self.counters["decode_tokens"], 1)
+        npre = max(self.counters["prefill_tokens"], 1)
         nq = max(self.counters["prefix_queried_blocks"], 1)
         return {
             "counters": dict(self.counters),
@@ -280,6 +310,12 @@ class ServeMetrics:
                     self.counters["kv_bytes_fused_est"] / ndec,
                 "kv_bytes_per_token_gathered":
                     self.counters["kv_bytes_gathered_est"] / ndec,
+                "prefill_path": self.prefill_path,
+                "prefill_chunks_by_path": dict(self.prefill_path_chunks),
+                "kv_bytes_per_prefill_token_fused":
+                    self.counters["prefill_kv_bytes_fused_est"] / npre,
+                "kv_bytes_per_prefill_token_gathered":
+                    self.counters["prefill_kv_bytes_gathered_est"] / npre,
             },
             "prefix_cache": {
                 "hit_rate": self.counters["prefix_hit_blocks"] / nq,

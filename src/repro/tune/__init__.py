@@ -18,12 +18,14 @@ distinct linear-layer problem of a model config and persists the winners
 (``REPRO_TUNE_CACHE`` overrides the cache path; ``REPRO_TUNE=off``
 forces the heuristic path, ``auto`` tunes on cache miss on-device).
 """
-from .space import (KERNELS, READ_MODES, KernelConfig, candidate_configs,
-                    clamp_config, divisor_clamp, heuristic_config)
+from .space import (KERNELS, PAGED_KERNELS, READ_MODES, KernelConfig,
+                    candidate_configs, clamp_config, divisor_clamp,
+                    heuristic_config)
 from .cache import (TuneCache, bucket_batch, cache_key, default_cache,
                     device_tag, reset_default_cache)
 from .measure import measure
-from .dispatch import kernel_config, tune_mode
+from .dispatch import (kernel_config, kernel_supports,
+                       kernel_unsupported_reason, tune_mode)
 from .autotune import (TuneResult, Timing, collect_bcq_specs, pretune_params,
                        tune, tune_shape)
 
@@ -32,8 +34,9 @@ __all__ = [
     "clamp_config", "divisor_clamp", "heuristic_config",
     "TuneCache", "bucket_batch", "cache_key", "default_cache", "device_tag",
     "reset_default_cache",
-    "measure",
-    "kernel_config", "tune_mode",
+    "PAGED_KERNELS", "measure",
+    "kernel_config", "kernel_supports", "kernel_unsupported_reason",
+    "tune_mode",
     "TuneResult", "Timing", "collect_bcq_specs", "pretune_params", "tune",
     "tune_shape",
 ]

@@ -35,9 +35,13 @@ def tune_mode() -> str:
     return "on"
 
 
-def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
-                    bits: Optional[int] = None, **caps) -> bool:
-    """Capability probe: can this Pallas kernel launch the problem at all?
+def kernel_unsupported_reason(kernel: str, *, m: int, n: int,
+                              group_size: int, bits: Optional[int] = None,
+                              **caps) -> Optional[str]:
+    """Capability probe: ``None`` when the Pallas kernel can launch the
+    problem, else the SPECIFIC cap that failed (so callers, traces and
+    tests can assert *why* a launch negotiated down to the gathered
+    path instead of collapsing every reason into one boolean).
 
     For the GEMM kernels (callers: the quant backend registry,
     :mod:`repro.quant.backends`) ``(m, n)`` are the weight dims and the
@@ -46,48 +50,86 @@ def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
     covers the LUT kernel's mu=4 sub-group split), and the bit-serial
     loop streams at most 8 planes.
 
-    For ``paged_attention`` (caller: ``models.attention``'s paged decode
-    router) the dims are remapped — ``m`` is the total q-head count,
+    For the paged-attention family (``paged_attention`` decode,
+    ``paged_prefill`` chunked prefill; caller: ``models.attention``'s
+    routers) the dims are remapped — ``m`` is the total q-head count,
     ``n`` the per-sequence KV capacity, ``group_size`` the pool block
-    size — and ``caps`` carries the variant axes the kernel does not
-    cover yet, which fall back to the gathered-XLA path:
+    size — and ``caps`` carries the variant axes:
 
-      * ``n_kv_heads``  — q heads must group evenly over kv heads;
+      * ``n_kv_heads``  — q heads must group evenly over kv heads
+        (reason ``"heads"``);
       * ``tp``          — model-axis shard count when the serve engine
         runs the kernel per-shard under ``shard_map``: both head counts
-        must divide the mesh so every shard sees whole GQA groups (the
-        probe then applies to the per-shard head counts — narrow-GQA
-        models whose kv heads don't divide the mesh gather instead);
-      * ``kv_dtype``    — float pools only (int8-KV needs the per-slot
-        scale fold the gathered ``decode_attend`` already does);
-      * ``window``      — sliding-window masking (ring caches are not
-        paged, so this is only reachable through direct op calls);
-      * ``latent``      — MLA absorbed decode stays on the gathered view.
+        must divide the mesh so every shard sees whole GQA groups
+        (reason ``"tp"``);
+      * ``kv_dtype``    — float AND int8 pools are covered (the int8
+        kernels fold the per-slot scales in-kernel); anything else is
+        reason ``"kv_dtype"``;
+      * ``window``      — sliding-window masking still gathers (ring
+        caches are not paged, so this is only reachable through direct
+        op calls; reason ``"window"``);
+      * ``latent``      — MLA absorbed decode is fused
+        (``paged_attention``), but MLA *prefill* needs the
+        decompressing ``kv_map_fn`` and stays gathered
+        (``paged_prefill`` reason ``"latent"``).
+
+    Reasons: ``"unknown_kernel"``, ``"tp"``, ``"heads"``, ``"shape"``,
+    ``"window"``, ``"kv_dtype"``, ``"latent"``, ``"group_size"``,
+    ``"bits"``.  Every non-None return is also recorded on the active
+    trace (``record_kernel_unsupported``).
     """
-    from .space import KERNELS
+    reason = _unsupported_reason(kernel, m=m, n=n, group_size=group_size,
+                                 bits=bits, **caps)
+    if reason is not None:
+        from repro.obs.trace import record_kernel_unsupported
+        record_kernel_unsupported(kernel, reason, m=m, n=n)
+    return reason
+
+
+def _unsupported_reason(kernel: str, *, m: int, n: int, group_size: int,
+                        bits: Optional[int] = None,
+                        **caps) -> Optional[str]:
+    from .space import KERNELS, PAGED_KERNELS
     if kernel not in KERNELS:
-        return False
-    if kernel == "paged_attention":
+        return "unknown_kernel"
+    if kernel in PAGED_KERNELS:
         hkv = int(caps.get("n_kv_heads", m) or m)
         tp = int(caps.get("tp", 1) or 1)
         if tp < 1 or m % tp or hkv % tp:
-            return False
+            return "tp"
         m, hkv = m // tp, hkv // tp            # per-shard head counts
-        if m < 1 or hkv < 1 or m % hkv or n < 1 or group_size < 1:
-            return False
-        if caps.get("window", 0) or caps.get("latent", False):
-            return False
+        if m < 1 or hkv < 1 or m % hkv:
+            return "heads"
+        if n < 1 or group_size < 1:
+            return "shape"
+        if caps.get("window", 0):
+            return "window"
+        latent = bool(caps.get("latent", False))
+        if latent and kernel == "paged_prefill":
+            return "latent"                    # kv_map_fn decompression
         dt = caps.get("kv_dtype")
-        if dt is not None:
+        if dt is not None and not latent:
             import jax.numpy as jnp
-            if not jnp.issubdtype(jnp.dtype(dt), jnp.floating):
-                return False
-        return True
-    if m < 1 or n < 1 or group_size < 8 or group_size % 8:
-        return False
+            dt = jnp.dtype(dt)
+            if not (jnp.issubdtype(dt, jnp.floating) or dt == jnp.int8):
+                return "kv_dtype"
+        return None
+    if m < 1 or n < 1:
+        return "shape"
+    if group_size < 8 or group_size % 8:
+        return "group_size"
     if bits is not None and not 1 <= bits <= 8:
-        return False
-    return True
+        return "bits"
+    return None
+
+
+def kernel_supports(kernel: str, *, m: int, n: int, group_size: int,
+                    bits: Optional[int] = None, **caps) -> bool:
+    """Boolean view of :func:`kernel_unsupported_reason` (True == the
+    kernel can launch this problem)."""
+    return kernel_unsupported_reason(kernel, m=m, n=n,
+                                     group_size=group_size, bits=bits,
+                                     **caps) is None
 
 
 def kernel_config(kernel: str, *, b: int, m: int, n: int, dtype,

@@ -23,7 +23,12 @@ import dataclasses
 import itertools
 from typing import Sequence
 
-KERNELS = ("lut_gemm", "bcq_matmul", "paged_attention")
+KERNELS = ("lut_gemm", "bcq_matmul", "paged_attention", "paged_prefill")
+
+# the paged-attention kernel family shares one config axis (the kv-head
+# tile); "paged_prefill" is a distinct kernel NAME so its cache entries
+# can never collide with decode's (and stale pre-prefill caches miss)
+PAGED_KERNELS = ("paged_attention", "paged_prefill")
 
 READ_MODES = ("onehot", "select", "gather")
 
@@ -54,7 +59,7 @@ class KernelConfig:
 
     def to_kwargs(self, kernel: str) -> dict:
         """kwargs for the kernel's public op wrapper."""
-        if kernel == "paged_attention":
+        if kernel in PAGED_KERNELS:
             return dict(block_h=self.block_h)
         kw = dict(block_b=self.block_b, block_m=self.block_m,
                   block_n=self.block_n)
@@ -93,8 +98,8 @@ def clamp_config(cfg: KernelConfig, kernel: str, *, b: int, m: int, n: int,
     kv-head count, ``n`` the per-sequence KV capacity and ``group_size``
     the pool block size; the only live axis is ``block_h`` (clamped to a
     divisor of the head count) and the GEMM tile fields are normalized
-    so configs dedupe."""
-    if kernel == "paged_attention":
+    so configs dedupe.  ``paged_prefill`` shares the same remapping."""
+    if kernel in PAGED_KERNELS:
         return KernelConfig(block_h=divisor_clamp(cfg.block_h, max(m, 1)))
     n_pad = _round_up(max(n, 1), group_size)
     block_n = _round_up(min(cfg.block_n, n_pad), group_size)
@@ -117,9 +122,10 @@ def heuristic_config(kernel: str, *, b: int, m: int, n: int,
     """
     if kernel not in KERNELS:
         raise ValueError(f"unknown kernel {kernel!r}; known: {KERNELS}")
-    if kernel == "paged_attention":
+    if kernel in PAGED_KERNELS:
         # decode head counts are small: all kv heads per grid step keeps
-        # the grid minimal and the q tile resident
+        # the grid minimal and the q tile resident (prefill inherits the
+        # same default — the chunk dim rides inside the block)
         return clamp_config(KernelConfig(block_h=0), kernel, b=b, m=m, n=n,
                             group_size=group_size)
     block_b = 8 if b <= 8 else (16 if b <= 16 else 32)
@@ -143,7 +149,7 @@ def candidate_configs(kernel: str, *, b: int, m: int, n: int, mu: int = 4,
     out = [heuristic_config(kernel, b=b, m=m, n=n, mu=mu,
                             group_size=group_size)]
     seen = {out[0]}
-    if kernel == "paged_attention":
+    if kernel in PAGED_KERNELS:
         for bh in _BLOCK_H:
             cfg = clamp_config(KernelConfig(block_h=bh), kernel,
                                b=b, m=m, n=n, group_size=group_size)

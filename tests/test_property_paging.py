@@ -24,6 +24,10 @@ Invariants (the ones the paged cache's correctness rests on):
   * device-side ``_paged_insert`` routes every invalid write (negative
     position, unallocated / out-of-range logical block) to the trash
     block: no write ever aliases a block owned by a live sequence.
+  * the chunked-prefill flash kernel matches its gathered oracle on
+    random pool layouts, ragged chunk positions and pad rows — every
+    drawn (tables, positions, chunk) agrees with ``paged_prefill_ref``
+    and pad query rows come back exactly zero.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -35,11 +39,16 @@ pytest.importorskip(
            "must collect without it")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
+from repro.kernels.paged_attention import paged_prefill, paged_prefill_ref
 from repro.models import attention as attn
 from repro.serve import BlockPool, PrefixCache, Request, Scheduler
 
 _SET = dict(max_examples=40, deadline=None,
             suppress_health_check=[HealthCheck.too_slow])
+# the kernel walk runs a Pallas interpret launch per example — keep the
+# draw count low enough that the walk stays in tier-1 budget
+_KSET = dict(max_examples=12, deadline=None,
+             suppress_health_check=[HealthCheck.too_slow])
 
 
 # ---------------------------------------------------------------------------
@@ -417,3 +426,56 @@ def test_paged_insert_only_touches_owned_or_trash(case):
             else:
                 assert p == -1
     assert (newpos[0] == -1).all(), "trash block recorded a live position"
+
+
+# ---------------------------------------------------------------------------
+# device side: chunked-prefill kernel vs gathered oracle
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def prefill_kernel_cases(draw):
+    bs = draw(st.sampled_from([2, 4]))
+    pages = draw(st.integers(1, 4))
+    b = draw(st.integers(1, 3))
+    h, hkv = draw(st.sampled_from([(4, 2), (2, 2), (3, 1)]))
+    c = draw(st.integers(1, 2 * bs))          # chunk length
+    # per-row context end within capacity; small values force pad rows
+    ends = draw(st.lists(st.integers(0, pages * bs - 1),
+                         min_size=b, max_size=b))
+    seed = draw(st.integers(0, 999))
+    return bs, pages, b, h, hkv, c, ends, seed
+
+
+@given(prefill_kernel_cases())
+@settings(**_KSET)
+def test_prefill_kernel_matches_oracle_on_random_layouts(case):
+    bs, pages, b, h, hkv, c, ends, seed = case
+    nb = b * pages + 2
+    rng = np.random.default_rng(seed)
+    d = 8
+    k = jnp.asarray(rng.normal(size=(nb, bs, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(nb, bs, hkv, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, c, h, d)), jnp.float32)
+    tables = np.full((b, pages), -1, np.int32)
+    pos = np.full((nb, bs), -1, np.int32)
+    free = list(rng.permutation(np.arange(1, nb)))
+    for row, end in enumerate(ends):
+        for j in range(end // bs + 1):
+            blk = free.pop()
+            tables[row, j] = blk
+            pos[blk] = j * bs + np.arange(bs)
+    # the chunk ends at each row's context end; earlier rows pad at -1
+    cpos = (np.asarray(ends)[:, None]
+            - np.arange(c - 1, -1, -1)[None]).astype(np.int32)
+    cpos = np.where(cpos < 0, -1, cpos)
+    got = paged_prefill(q, k, v, jnp.asarray(pos), jnp.asarray(tables),
+                        jnp.asarray(cpos), interpret=True)
+    want = paged_prefill_ref(q, k, v, jnp.asarray(pos),
+                             jnp.asarray(tables), jnp.asarray(cpos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+    assert np.isfinite(np.asarray(got)).all()
+    pads = cpos < 0
+    if pads.any():
+        assert np.abs(np.asarray(got)[pads]).max() == 0.0
