@@ -18,15 +18,15 @@ from repro.core import energy_model as em
 from repro.core.mixed_precision import allocate_bits, average_bits
 from repro.models import Model
 from repro.quant import QuantSpec, quantize_model
-from repro.quantize import collect_linears
-from repro.quantize.optq import capture_calibration, optq_quantize_model
+from repro.quant.ptq import collect_linears
+from repro.quant.optq import capture_calibration, optq_quantize_model
 
 
 def run():
     common.header("Fig 17 / Table VI analogue — quality vs efficiency")
     model, params = common.tiny_lm()
     ppl_fp = common.perplexity(model, params)
-    m_q = Model(model.cfg.replace(gemm_backend="bcq_xla"))
+    m_q = Model(model.cfg.replace(quant=QuantSpec(backend="bcq_xla")))
     gs = 64
 
     # calibration activations for the paper's OPTQ baseline
@@ -51,12 +51,30 @@ def run():
         rows.append((f"FIGNA-OPTQ-Q{bits}", bits, ppl, eff))
 
     # non-uniform BCQ at 2/3/4 bits (ShiftAddLLM-class -> FIGLUT)
+    bytes_by_bits = {}
     for bits in (2, 3, 4):
-        qp, _ = quantize_model(params, QuantSpec(bits=bits, group_size=gs,
-                                                 iters=4), model.axes())
+        qp, man = quantize_model(params, QuantSpec(bits=bits, group_size=gs,
+                                                   iters=4), model.axes())
+        bytes_by_bits[bits] = man.quant_bytes
         ppl = common.perplexity(m_q, qp)
         eff = em.model_report("FIGLUT-I", "opt-6.7b", B=32, q=bits).tops_per_w
         rows.append((f"FIGLUT-BCQ-Q{bits}", bits, ppl, eff))
+
+    # ternary (1.58-bit plane bundle): the below-2-bit end of the
+    # tradeoff curve — strictly fewer weight bytes than generic BCQ2
+    # (one alpha row, no offset) at the bit-serial engine's q=2 cost
+    from repro.quant import TERNARY_BITS
+    qp, man_t = quantize_model(
+        params, QuantSpec(format="ternary", group_size=gs), model.axes())
+    ppl_t = common.perplexity(m_q, qp)
+    eff_t = em.model_report("FIGLUT-I", "opt-6.7b", B=32,
+                            q=TERNARY_BITS).tops_per_w
+    rows.append((f"FIGLUT-TERNARY-Q{TERNARY_BITS:.2f}", TERNARY_BITS,
+                 ppl_t, eff_t))
+    print(f"fig17,ternary_quant_bytes={man_t.quant_bytes},"
+          f"bcq2_quant_bytes={bytes_by_bits[2]}")
+    assert man_t.quant_bytes < bytes_by_bits[2], \
+        (man_t.quant_bytes, bytes_by_bits[2])
 
     # mixed precision averaging ~2.4 bits
     lin = collect_linears(params, model.axes())

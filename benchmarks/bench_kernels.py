@@ -19,6 +19,8 @@ from repro import tune as tune_mod
 from repro.core import bcq
 from repro.kernels.lut_gemm import lut_gemm, ref as lref
 from repro.kernels.bcq_matmul import bcq_matmul
+from repro.kernels.ternary_matmul import ternary_matmul, ternary_ref
+from repro.quant.formats import quantize_ternary
 from repro.kernels.paged_attention import (paged_attention,
                                            paged_attention_int8,
                                            paged_attention_mla,
@@ -135,6 +137,52 @@ def _paged_variant_bench(rng):
     return err8, err_m, err_p
 
 
+def _ternary_bench(rng):
+    """The dedicated ternary kernel vs its gathered oracle and vs the
+    generic 2-plane encoding it replaces: exact numerics (aligned
+    launch geometry — both sides evaluate identical f32 ops) and the
+    structural storage win (one alpha row, no offset row), plus
+    interpret-mode wall-times against the generic lut_gemm at q=2."""
+    M, N, B = 256, 512, 8
+    W = jnp.array(rng.normal(size=(M, N)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(B, N)).astype(np.float32))
+    wt = quantize_ternary(W, group_size=128)
+    wq2 = bcq.quantize(W, bits=2, group_size=128, iters=2)
+
+    want = ternary_ref(x, wt)
+    got = ternary_matmul(x, wt, interpret=True, block_b=B, block_n=N)
+    err = float(jnp.abs(got - want).max())
+
+    # bit-exactness gate on the arithmetically exact case (pow2 alphas,
+    # integer activations): every partial product is an exact f32, so
+    # kernel == oracle holds regardless of reduction order/fusion
+    wi = jnp.array(0.5 * rng.integers(-1, 2, size=(M, N)).astype(np.float32))
+    xi = jnp.array(rng.integers(-8, 9, size=(B, N)).astype(np.float32))
+    wti = quantize_ternary(wi, group_size=128)
+    exact_err = float(jnp.abs(
+        ternary_matmul(xi, wti, interpret=True, block_b=B)
+        - ternary_ref(xi, wti)).max())
+    bytes_ratio = wt.nbytes() / wq2.nbytes()
+    print(f"kernels,ternary_matmul_maxerr={err:.2e},"
+          f"ternary_matmul_exact_err={exact_err:.2e},"
+          f"ternary_bytes={wt.nbytes()},bcq2_bytes={wq2.nbytes()},"
+          f"bytes_ratio={bytes_ratio:.3f}")
+    assert exact_err == 0.0, \
+        "ternary kernel must be bit-exact vs the oracle on exact inputs"
+    assert err < 1e-4, err   # float case: reduction-order ulps only
+    # the layout's point: strictly fewer weight bytes than generic 2-bit
+    assert wt.nbytes() < wq2.nbytes(), (wt.nbytes(), wq2.nbytes())
+    common.bench(
+        "kernels,ternary_matmul_interpret",
+        lambda: jax.block_until_ready(
+            ternary_matmul(x, wt, interpret=True)), n=2)
+    common.bench(
+        "kernels,lut_gemm_q2_interpret",
+        lambda: jax.block_until_ready(lut_gemm(x, wq2, interpret=True)),
+        n=2)
+    return err, exact_err, bytes_ratio
+
+
 def _tuned_vs_default(rng):
     """Autotune both kernels on a small shape and report the speedup of
     the measured winner over the heuristic default.  The heuristic is
@@ -145,9 +193,11 @@ def _tuned_vs_default(rng):
     W = jnp.array(rng.normal(size=(M, N)).astype(np.float32))
     x = jnp.array(rng.normal(size=(B, N)).astype(np.float32))
     wq = bcq.from_uniform(W, bits=4, group_size=128)
+    wt = quantize_ternary(W, group_size=128)
     best_speedup = 0.0
-    for kernel in ("lut_gemm", "bcq_matmul"):
-        res = tune_mod.tune(kernel, x, wq, mu=4, reps=3, warmup=1,
+    for kernel in ("lut_gemm", "bcq_matmul", "ternary_matmul"):
+        w_in = wt if kernel == "ternary_matmul" else wq
+        res = tune_mod.tune(kernel, x, w_in, mu=4, reps=3, warmup=1,
                             max_candidates=8, cache=None, interpret=True)
         print(f"kernels,{kernel}_default_ms={res.default_time*1e3:.3f},"
               f"tuned_ms={res.best_time*1e3:.3f},speedup={res.speedup:.2f},"
@@ -189,6 +239,7 @@ def run(bench_json: str = ""):
                  lambda: jax.block_until_ready(lref.dense_ref(x, wq)), n=2)
     paged_err, read_ratio = _paged_attention_bench(rng)
     err_int8, err_mla, err_prefill = _paged_variant_bench(rng)
+    err_t, exact_err_t, t_bytes_ratio = _ternary_bench(rng)
     speedup = _tuned_vs_default(rng)
     if bench_json:
         # max-errors gate with generous relative slack (FP noise varies
@@ -210,6 +261,16 @@ def run(bench_json: str = ""):
                 _scalar(err_prefill, "lower", 3.0, abs_max=1e-4),
             "paged_kv_block_read_ratio":
                 _scalar(read_ratio, "lower", 0.0),
+            # float case: reduction-order ulps only (fusion-dependent)
+            "ternary_matmul_maxerr":
+                _scalar(err_t, "lower", 3.0, abs_max=1e-4),
+            # exact-arithmetic case: bit-exact by contract, gate at zero
+            "ternary_matmul_exact_err":
+                _scalar(exact_err_t, "lower", 0.0, abs_max=0.0),
+            # deterministic layout ratio; < 1 is the format's raison
+            # d'etre (one alpha row, no offset vs the 2-plane generic)
+            "ternary_vs_bcq2_bytes_ratio":
+                _scalar(t_bytes_ratio, "lower", 0.0, abs_max=0.999),
             # timing-derived: the structural abs_min=1.0 floor is the
             # real gate, the relative slack absorbs timer jitter
             "tuned_speedup": _scalar(speedup, "higher", 0.9, abs_min=1.0),

@@ -768,11 +768,28 @@ def run(json_path: str = "", requests: int = 6, max_new: int = 8,
     rows = [bench_backend("dense", model, params, cfg,
                           requests=requests, max_new=max_new)]
     spec = QuantSpec(bits=bits, group_size=32, iters=2, backend="bcq_xla")
-    qparams, _ = quantize_model(params, spec, model.axes())
+    qparams, man_bcq = quantize_model(params, spec, model.axes())
     model_q = Model(cfg.replace(quant=spec))
     rows.append(bench_backend(f"bcq{bits}", model_q, qparams, cfg,
                               requests=requests, max_new=max_new))
-    # both backends must serve the full stream through the paged engine
+    # ternary: the 1.58-bit plane bundle on the same engine.  The byte
+    # comparison is against a generic 2-bit BCQ manifest at the same
+    # group size — the ternary layout must be strictly smaller
+    spec_t = QuantSpec(format="ternary", group_size=32, backend="bcq_xla")
+    qparams_t, man_t = quantize_model(params, spec_t, model.axes())
+    rows.append(bench_backend("ternary", Model(cfg.replace(quant=spec_t)),
+                              qparams_t, cfg, requests=requests,
+                              max_new=max_new))
+    man_bcq2 = quantize_model(params,
+                              QuantSpec(bits=2, group_size=32, iters=2),
+                              model.axes())[1]
+    print(f"serve,ternary_quant_bytes={man_t.quant_bytes},"
+          f"bcq2_quant_bytes={man_bcq2.quant_bytes},"
+          f"ternary_avg_effective_bits={man_t.avg_effective_bits:.3f}")
+    assert man_t.quant_bytes < man_bcq2.quant_bytes, \
+        (man_t.quant_bytes, man_bcq2.quant_bytes)
+    assert man_t.avg_effective_bits < man_bcq2.avg_effective_bits
+    # all backends must serve the full stream through the paged engine
     assert all(r["requests_done"] == requests for r in rows)
     common.header("Paged kernels: fused (interpret) vs gathered view — "
                   "decode + chunked prefill")

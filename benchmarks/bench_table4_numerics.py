@@ -49,10 +49,10 @@ def run():
 
     qparams, _ = quantize_model(params, QuantSpec(format="rtn", bits=4,
                                                   group_size=64), model.axes())
-    m_f = Model(model.cfg.replace(gemm_backend="bcq_xla"))
+    m_f = Model(model.cfg.replace(quant=QuantSpec(backend="bcq_xla")))
     ppl_f = common.perplexity(m_f, qparams)
 
-    m_dense = Model(model.cfg.replace(gemm_backend="dense"))
+    m_dense = Model(model.cfg.replace(quant=QuantSpec(backend="dense")))
     ppl_gpu = common.perplexity(m_dense, qparams)
 
     print(f"table4_ppl,FP16-baseline,{ppl_fp:.3f}")

@@ -108,14 +108,7 @@ class ModelConfig:
     quant: Optional[QuantSpec] = None  # declarative quantization spec: the
                                       # single source of truth for format /
                                       # bits / group / backend preference
-                                      # (repro.quant); None -> legacy knobs
-                                      # below apply
-    gemm_backend: str = "dense"       # DEPRECATED shim (one release):
-                                      # dense | bcq_xla | lut_pallas |
-                                      # mxu_pallas — superseded by
-                                      # quant.backend
-    quant_bits: int = 0               # DEPRECATED shim: 0 -> unquantized —
-                                      # superseded by quant.bits
+                                      # (repro.quant); None -> unquantized
     remat: bool = True
     scan_layers: bool = True
     kv_replication: int = 1           # replicate kv heads r-fold so the KV
@@ -139,23 +132,19 @@ class ModelConfig:
     @property
     def backend_preference(self) -> str:
         """Execution-backend preference fed to the registry
-        (:mod:`repro.quant.backends`): the spec's choice when a
-        ``quant`` spec is set, else the legacy ``gemm_backend`` string.
-        "auto" lets capability negotiation pick per weight."""
+        (:mod:`repro.quant.backends`): the ``quant`` spec's choice;
+        "auto" lets capability negotiation pick per weight.  Unquantized
+        models run dense linears, where the preference is inert."""
         if self.quant is not None:
             return self.quant.backend
-        return self.gemm_backend
+        return "dense"
 
     def quant_spec(self) -> Optional[QuantSpec]:
-        """The effective QuantSpec: the explicit field, or one synthesized
-        from the legacy ``quant_bits``/``gemm_backend`` shims (None when
-        the model is unquantized)."""
-        if self.quant is not None:
-            return self.quant
-        if self.quant_bits:
-            return QuantSpec.from_legacy(bits=self.quant_bits,
-                                         backend=self.gemm_backend)
-        return None
+        """The declarative QuantSpec (None when the model is
+        unquantized).  The ``gemm_backend``/``quant_bits`` shims that
+        used to synthesize a spec here were removed after their
+        one-release deprecation window — set ``quant=QuantSpec(...)``."""
+        return self.quant
 
     @property
     def head_dim_(self) -> int:

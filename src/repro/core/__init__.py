@@ -1,11 +1,13 @@
-"""FIGLUT core: BCQ weight format, LUT-based FP-INT GEMM, energy model."""
+"""FIGLUT core: plane-native weight bundles, LUT-based FP-INT GEMM, energy model."""
 from repro.core.bcq import (BCQWeight, quantize, from_uniform, dequantize,
                             pack_planes, unpack_planes, packed_nbytes)
 from repro.core.lut_gemm import bcq_apply, bcq_xla_matmul, Backend
+from repro.core.plane import KINDS, PlaneBundle, TERNARY_BITS
 from repro.core.quantized_linear import linear_apply, quantize_linear
 
 __all__ = [
-    "BCQWeight", "quantize", "from_uniform", "dequantize", "pack_planes",
-    "unpack_planes", "packed_nbytes", "bcq_apply", "bcq_xla_matmul",
-    "Backend", "linear_apply", "quantize_linear",
+    "BCQWeight", "PlaneBundle", "KINDS", "TERNARY_BITS", "quantize",
+    "from_uniform", "dequantize", "pack_planes", "unpack_planes",
+    "packed_nbytes", "bcq_apply", "bcq_xla_matmul", "Backend",
+    "linear_apply", "quantize_linear",
 ]

@@ -30,16 +30,17 @@ All solvers are pure JAX and jittable; they vectorize over rows and groups.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.core.plane import (PlaneBundle, dequantize, pack_planes,
+                              unpack_planes)
 
 __all__ = [
     "BCQWeight",
+    "PlaneBundle",
     "quantize",
     "from_uniform",
     "dequantize",
@@ -49,71 +50,16 @@ __all__ = [
 ]
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class BCQWeight:
-    """BCQ-quantized weight tensor (pytree).
-
-    Attributes:
-      packed:   uint8[q, out, in//8]  bit-planes, 8 binary weights per byte
-                (LSB-first within the byte along the input dim).  Bit value 1
-                encodes b=+1, 0 encodes b=-1.
-      alpha:    f32[q, out, n_groups] per-plane scaling factors.
-      z:        f32[out, n_groups]    offset term (0 for pure BCQ).
-      group_size: static — input-dim group size for alpha/z.
-      in_features / out_features: static logical shape (pre-padding).
-    """
-
-    packed: jax.Array
-    alpha: jax.Array
-    z: jax.Array
-    group_size: int = dataclasses.field(metadata=dict(static=True))
-    in_features: int = dataclasses.field(metadata=dict(static=True))
-    out_features: int = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def bits(self) -> int:
-        return self.packed.shape[0]
-
-    @property
-    def n_groups(self) -> int:
-        return self.alpha.shape[-1]
-
-    def nbytes(self) -> int:
-        """Storage footprint in bytes (what HBM actually holds)."""
-        return (
-            self.packed.size * self.packed.dtype.itemsize
-            + self.alpha.size * self.alpha.dtype.itemsize
-            + self.z.size * self.z.dtype.itemsize
-        )
+# ``BCQWeight`` is the historical name for the generic-BCQ view of the
+# plane-native layout; since PR 10 it IS the :class:`PlaneBundle`
+# (kind="bcq" by default) — every constructor keyword, pytree
+# registration, checkpoint encoding and isinstance check carries over.
+BCQWeight = PlaneBundle
 
 
 # ---------------------------------------------------------------------------
 # packing
 # ---------------------------------------------------------------------------
-
-
-def pack_planes(planes: jax.Array) -> jax.Array:
-    """Pack {-1,+1} (or {0,1}) bit-planes into uint8, LSB-first.
-
-    planes: [q, out, in] with in % 8 == 0; values in {-1,+1} or {0,1}.
-    returns uint8[q, out, in//8].
-    """
-    q, out, n = planes.shape
-    if n % 8 != 0:
-        raise ValueError(f"input dim {n} not divisible by 8; pad first")
-    bits = (planes > 0).astype(jnp.uint8).reshape(q, out, n // 8, 8)
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    return (bits << shifts).sum(axis=-1).astype(jnp.uint8)
-
-
-def unpack_planes(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
-    """Inverse of :func:`pack_planes`; returns ±1 planes [q, out, in]."""
-    q, out, nb = packed.shape
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    bits = (packed[..., None] >> shifts) & jnp.uint8(1)  # [q, out, nb, 8]
-    pm1 = bits.astype(dtype) * 2 - 1
-    return pm1.reshape(q, out, nb * 8)
 
 
 def packed_nbytes(out_features: int, in_features: int, bits: int,
@@ -122,32 +68,6 @@ def packed_nbytes(out_features: int, in_features: int, bits: int,
     n_groups = -(-in_features // group_size)
     return (bits * out_features * in_features) // 8 + \
         alpha_bytes * out_features * n_groups * (bits + 1)
-
-
-# ---------------------------------------------------------------------------
-# dequantize (reference reconstruction)
-# ---------------------------------------------------------------------------
-
-
-def dequantize(w: BCQWeight, dtype=jnp.float32) -> jax.Array:
-    """Reconstruct the dense weight matrix W[out, in] from BCQ form.
-
-    Written as one elementwise chain (unpack -> scale -> reduce over q)
-    so XLA can fuse it into a single kernel whose HBM traffic is the
-    packed bytes in + the dense matrix out — the plane tensors stay in
-    registers on a fusing backend.  Pass dtype=bf16 on the serve path:
-    an f32 dense intermediate doubles the dominant weight-byte term.
-    """
-    q, out, nb = w.packed.shape
-    in_pad = nb * 8
-    g = w.group_size
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    bits = (w.packed[..., None] >> shifts) & jnp.uint8(1)       # [q,out,nb,8]
-    pm1 = bits.astype(jnp.float32) * 2 - 1
-    alpha_cols = jnp.repeat(w.alpha, g, axis=-1)                # [q,out,in_pad]
-    z_cols = jnp.repeat(w.z, g, axis=-1)                        # [out,in_pad]
-    dense = (pm1.reshape(q, out, in_pad) * alpha_cols).sum(0) + z_cols
-    return dense[:, : w.in_features].astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,16 @@ Backends (all numerically equivalent up to FP reassociation; tested):
   * ``lut_pallas`` — the paper-faithful Pallas kernel (kernels/lut_gemm).
   * ``mxu_pallas`` — the beyond-paper dequant-in-VMEM kernel
                      (kernels/bcq_matmul).
+  * ``ternary_pallas`` — the dedicated 1.58-bit kernel
+                     (kernels/ternary_matmul); only consumes
+                     ``kind="ternary"`` bundles.
 
-``lut_pallas``/``mxu_pallas`` target TPU; on this CPU container they run
+The ``dense``/``bcq_xla`` paths are *kind-aware* through
+``plane.dequantize``, so a ternary bundle executes correctly on every
+XLA fallback; only the per-plane ``bcq_xla_planes`` contraction is
+BCQ-specific.
+
+The Pallas backends target TPU; on this CPU container they run
 under ``interpret=True`` (set ``repro.core.lut_gemm.INTERPRET = True`` —
 done automatically when no TPU is present).
 
@@ -32,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.core.bcq import BCQWeight, dequantize, unpack_planes
 
-Backend = Literal["dense", "bcq_xla", "lut_pallas", "mxu_pallas"]
+Backend = Literal["dense", "bcq_xla", "lut_pallas", "mxu_pallas",
+                  "ternary_pallas"]
 
 # interpret=True when running on CPU (kernel tests / examples); the dry-run
 # and production configs use bcq_xla for traced code anyway.
@@ -48,6 +57,10 @@ def bcq_xla_matmul(x: jax.Array, w: BCQWeight, out_dtype=None) -> jax.Array:
     matmul prologue; HBM-side weight bytes remain the packed uint8 planes.
     """
     out_dtype = out_dtype or x.dtype
+    if w.kind != "bcq":
+        raise ValueError(
+            f"bcq_xla_matmul reads independent ±1 planes (kind='bcq'); "
+            f"got kind={w.kind!r} — use the fused path or ternary_pallas")
     q, m, nb = w.packed.shape
     n_pad = nb * 8
     g = w.group_size
@@ -66,8 +79,9 @@ def bcq_xla_matmul(x: jax.Array, w: BCQWeight, out_dtype=None) -> jax.Array:
                       preferred_element_type=jnp.float32)
     y = jnp.einsum("qbmG,qmG->bm", part, w.alpha,
                    preferred_element_type=jnp.float32)
-    y = y + jnp.einsum("bG,mG->bm", xg.sum(-1), w.z,
-                       preferred_element_type=jnp.float32)
+    if w.z is not None:
+        y = y + jnp.einsum("bG,mG->bm", xg.sum(-1), w.z,
+                           preferred_element_type=jnp.float32)
     return y.reshape(*lead, m).astype(out_dtype)
 
 
@@ -106,4 +120,7 @@ def bcq_apply(x: jax.Array, w: BCQWeight, backend: Backend = "bcq_xla",
     if backend == "mxu_pallas":
         from repro.kernels.bcq_matmul import bcq_matmul
         return bcq_matmul(x, w, interpret=INTERPRET, out_dtype=out_dtype)
+    if backend == "ternary_pallas":
+        from repro.kernels.ternary_matmul import ternary_matmul
+        return ternary_matmul(x, w, interpret=INTERPRET, out_dtype=out_dtype)
     raise ValueError(f"unknown backend {backend!r}")

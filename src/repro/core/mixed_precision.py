@@ -42,7 +42,7 @@ def _as_2d(w: jax.Array, max_rows: int = 0) -> jax.Array:
     return w2
 
 
-def layer_sensitivity(w: jax.Array, bits: int, group_size: int = 128,
+def layer_sensitivity(w: jax.Array, bits: float, group_size: int = 128,
                       x_cal: Optional[jax.Array] = None, iters: int = 3,
                       max_rows: int = 0,
                       quantizer: Optional[Callable] = None) -> float:
@@ -63,13 +63,16 @@ def layer_sensitivity(w: jax.Array, bits: int, group_size: int = 128,
 
 
 def allocate_bits(weights: Mapping[str, jax.Array], target_avg_bits: float,
-                  candidates: Sequence[int] = (2, 3, 4),
+                  candidates: Sequence[float] = (2, 3, 4),
                   group_size: int = 128,
                   x_cal: Optional[Mapping[str, jax.Array]] = None,
                   sensitivity_fn: Callable = layer_sensitivity) -> dict:
     """Greedy marginal-gain mixed-precision allocation.
 
     target_avg_bits is parameter-weighted; returns {name: bits}.
+    ``candidates`` may be fractional: ``1.585`` (log2 3) is the ternary
+    sentinel, so e.g. ``--bits 1.58`` mixes ternary/2/3-bit layers and
+    the budget is charged at each format's information rate.
     """
     candidates = sorted(candidates)
     names = list(weights)
@@ -118,7 +121,7 @@ def quantize_mixed(weights: Mapping[str, jax.Array], bit_map: Mapping[str, int],
     }
 
 
-def average_bits(bit_map: Mapping[str, int],
+def average_bits(bit_map: Mapping[str, float],
                  weights: Mapping[str, jax.Array]) -> float:
     sizes = {k: int(np.prod(weights[k].shape)) for k in weights}
     total = sum(sizes.values())

@@ -5,6 +5,11 @@
   bcq_matmul       — beyond-paper TPU-native path: packed bit-planes
                      dequantized in VMEM + single MXU matmul per tile
                      (DESIGN.md §2).
+  ternary_matmul   — dedicated 1.58-bit fast path: one sign plane + one
+                     zero mask, in-kernel sign decode onto the half-LUT
+                     (§III-D), a single shared-magnitude alpha row and
+                     no offset — strictly fewer HBM bytes than generic
+                     2-bit BCQ.
   paged_attention  — fused paged-KV decode attention: the block-table
                      gather runs inside the kernel (scalar-prefetched
                      index_map), so the serve engine's decode path never
@@ -17,6 +22,7 @@ Each kernel ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
 """
 from .lut_gemm import lut_gemm
 from .bcq_matmul import bcq_matmul
+from .ternary_matmul import ternary_matmul
 from .paged_attention import paged_attention
 
-__all__ = ["lut_gemm", "bcq_matmul", "paged_attention"]
+__all__ = ["lut_gemm", "bcq_matmul", "ternary_matmul", "paged_attention"]

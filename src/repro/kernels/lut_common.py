@@ -1,0 +1,129 @@
+"""Shared in-kernel LUT machinery (FIGLUT §III-C/D/E).
+
+The LUT build, the mu-bit key extraction from packed planes, and the
+half-table sign-decoding read (hFFLUT) are the same math for every
+LUT-consuming kernel — the generic ``lut_gemm`` bit-serial kernel and
+the dedicated ``ternary_matmul`` fast path both import from here, so
+the half-LUT sign trick lives in exactly one place.
+
+Everything in this module is Pallas-safe: 2-D iota only, MXU
+contractions via ``lax.dot_general`` with f32 accumulation, no gathers
+unless the ``gather`` read mode is explicitly requested.  The host-side
+reference implementations of the same math live in ``repro.core.lut``.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+ReadMode = Literal["select", "onehot", "gather"]
+
+
+def sign_matrix(mu: int, half: bool, dtype):
+    """±1 sign matrix built from 2-D iota (TPU requires >=2-D iota)."""
+    rows = (1 << (mu - 1)) if half else (1 << mu)
+    base = (1 << (mu - 1)) if half else 0
+    p = lax.broadcasted_iota(jnp.int32, (rows, mu), 0) + base
+    j = lax.broadcasted_iota(jnp.int32, (rows, mu), 1)
+    return (((p >> j) & 1) * 2 - 1).astype(dtype)
+
+
+def build_lut(x_tile: jax.Array, mu: int, half: bool) -> jax.Array:
+    """Activation tile [TB, TN] -> LUT [TB, TN//mu, P] (§III-E).
+
+    The (groups x S^T) contraction runs on the MXU — the systolic
+    analogue of the paper's two-step adder tree.  With ``half=True``
+    only the MSB=1 rows are materialized (hFFLUT, §III-D).
+    """
+    tb, tn = x_tile.shape
+    g = tn // mu
+    s = sign_matrix(mu, half, jnp.float32)                # [P, mu]
+    groups = x_tile.reshape(tb * g, mu)
+    lut = lax.dot_general(groups, s,
+                          dimension_numbers=(((1,), (1,)), ((), ())),
+                          preferred_element_type=jnp.float32)
+    return lut.reshape(tb, g, -1)                         # [TB, G, P]
+
+
+def extract_keys(packed_tile: jax.Array, mu: int) -> jax.Array:
+    """int[TM, TN//8] bytes -> int32 keys [TM, TN//mu] (LSB-first, mu | 8)."""
+    tm, nb = packed_tile.shape
+    per_byte = 8 // mu
+    p32 = packed_tile.astype(jnp.int32)
+    cols = []
+    for s in range(per_byte):
+        cols.append((p32 >> (s * mu)) & ((1 << mu) - 1))
+    keys = jnp.stack(cols, axis=-1)                      # [TM, nb, per_byte]
+    return keys.reshape(tm, nb * per_byte)
+
+
+def read_lut(lut: jax.Array, keys: jax.Array, mu: int, half: bool,
+             mode: ReadMode) -> jax.Array:
+    """vals[b, m, g] = LUT[b, g, key[m, g]]  (sign-decoded if half).
+
+    lut: [TB, G, P] (P = 2^mu or 2^(mu-1)); keys int32 [TM, G].
+    """
+    if half:
+        hsz = 1 << (mu - 1)
+        msb = keys >= hsz                                 # [TM, G]
+        idx = jnp.where(msb, keys - hsz, (hsz - 1) - keys)
+        sign = jnp.where(msb, 1.0, -1.0).astype(lut.dtype)
+        n_entries = hsz
+    else:
+        idx = keys
+        sign = None
+        n_entries = lut.shape[-1]
+
+    if mode == "select":
+        # 2^mu-way mux sweep — the RAC's multiplexer, vectorized over lanes.
+        acc = jnp.zeros((lut.shape[0], keys.shape[0], keys.shape[1]), lut.dtype)
+        for p in range(n_entries):
+            hit = (idx == p).astype(lut.dtype)            # [TM, G]
+            acc = acc + hit[None, :, :] * lut[:, None, :, p]
+        vals = acc
+    elif mode == "onehot":
+        onehot = (idx[..., None] ==
+                  lax.broadcasted_iota(jnp.int32, (*idx.shape, n_entries), 2)
+                  ).astype(lut.dtype)                     # [TM, G, P]
+        # contract P with G as batch: [G,TM,P] x [G,P,TB] -> [G,TM,TB]
+        vals = lax.dot_general(
+            onehot.transpose(1, 0, 2), lut.transpose(1, 2, 0),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).transpose(2, 1, 0)                              # [TB, TM, G]
+    elif mode == "gather":
+        tb, tm = lut.shape[0], idx.shape[0]
+        vals = jnp.take_along_axis(
+            jnp.broadcast_to(lut[:, None], (tb, tm, lut.shape[1], lut.shape[2])),
+            jnp.broadcast_to(idx[None, :, :, None], (tb, tm, idx.shape[1], 1)),
+            axis=-1,
+        )[..., 0]                                         # [TB, TM, G]
+    else:
+        raise ValueError(mode)
+
+    if half:
+        vals = vals * sign[None, :, :]
+    return vals
+
+
+def ternary_plane_bytes(sign_byte: jax.Array, mask_byte: jax.Array):
+    """Decode the ternary bundle's (sign, mask) bytes into BCQ plane bytes.
+
+    The ternary identity  w = (a/2)(b1 + b2)  with
+    b1 = mask ? sign : +1  and  b2 = mask ? sign : -1  becomes, on the
+    packed bit level (bit 1 = +1 / "nonzero"),
+
+        b1 = sign | ~mask          b2 = sign & mask
+
+    — two bitwise ops per byte, the in-kernel realization of the paper's
+    sign-decoding unit.  Returns int32 byte planes for
+    :func:`extract_keys`.
+    """
+    s32 = sign_byte.astype(jnp.int32)
+    m32 = mask_byte.astype(jnp.int32)
+    b1 = (s32 | (~m32 & 0xFF)) & 0xFF
+    b2 = s32 & m32
+    return b1, b2

@@ -29,84 +29,15 @@ granularity Pallas exposes (block revisiting, not per-PE registers).
 from __future__ import annotations
 
 import functools
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 
-ReadMode = Literal["select", "onehot", "gather"]
-
-
-def _sign_matrix(mu: int, half: bool, dtype):
-    """+-1 sign matrix built from 2-D iota (TPU requires >=2-D iota)."""
-    rows = (1 << (mu - 1)) if half else (1 << mu)
-    base = (1 << (mu - 1)) if half else 0
-    p = lax.broadcasted_iota(jnp.int32, (rows, mu), 0) + base
-    j = lax.broadcasted_iota(jnp.int32, (rows, mu), 1)
-    return (((p >> j) & 1) * 2 - 1).astype(dtype)
-
-
-def _extract_keys(packed_tile: jax.Array, mu: int) -> jax.Array:
-    """uint8[TM, TN//8] -> int32 keys [TM, TN//mu] (LSB-first, mu | 8)."""
-    tm, nb = packed_tile.shape
-    per_byte = 8 // mu
-    p32 = packed_tile.astype(jnp.int32)
-    cols = []
-    for s in range(per_byte):
-        cols.append((p32 >> (s * mu)) & ((1 << mu) - 1))
-    keys = jnp.stack(cols, axis=-1)                      # [TM, nb, per_byte]
-    return keys.reshape(tm, nb * per_byte)
-
-
-def _read_lut(lut: jax.Array, keys: jax.Array, mu: int, half: bool,
-              mode: ReadMode) -> jax.Array:
-    """vals[b, m, g] = LUT[b, g, key[m, g]]  (sign-decoded if half).
-
-    lut: [TB, G, P] (P = 2^mu or 2^(mu-1)); keys int32 [TM, G].
-    """
-    if half:
-        hsz = 1 << (mu - 1)
-        msb = keys >= hsz                                 # [TM, G]
-        idx = jnp.where(msb, keys - hsz, (hsz - 1) - keys)
-        sign = jnp.where(msb, 1.0, -1.0).astype(lut.dtype)
-        n_entries = hsz
-    else:
-        idx = keys
-        sign = None
-        n_entries = lut.shape[-1]
-
-    if mode == "select":
-        # 2^mu-way mux sweep — the RAC's multiplexer, vectorized over lanes.
-        acc = jnp.zeros((lut.shape[0], keys.shape[0], keys.shape[1]), lut.dtype)
-        for p in range(n_entries):
-            hit = (idx == p).astype(lut.dtype)            # [TM, G]
-            acc = acc + hit[None, :, :] * lut[:, None, :, p]
-        vals = acc
-    elif mode == "onehot":
-        onehot = (idx[..., None] ==
-                  lax.broadcasted_iota(jnp.int32, (*idx.shape, n_entries), 2)
-                  ).astype(lut.dtype)                     # [TM, G, P]
-        # contract P with G as batch: [G,TM,P] x [G,P,TB] -> [G,TM,TB]
-        vals = lax.dot_general(
-            onehot.transpose(1, 0, 2), lut.transpose(1, 2, 0),
-            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        ).transpose(2, 1, 0)                              # [TB, TM, G]
-    elif mode == "gather":
-        tb, tm = lut.shape[0], idx.shape[0]
-        vals = jnp.take_along_axis(
-            jnp.broadcast_to(lut[:, None], (tb, tm, lut.shape[1], lut.shape[2])),
-            jnp.broadcast_to(idx[None, :, :, None], (tb, tm, idx.shape[1], 1)),
-            axis=-1,
-        )[..., 0]                                         # [TB, TM, G]
-    else:
-        raise ValueError(mode)
-
-    if half:
-        vals = vals * sign[None, :, :]
-    return vals
+# LUT build / key extraction / half-table sign-decode read are shared
+# with the dedicated ternary kernel — one home for the hFFLUT math.
+from repro.kernels.lut_common import (ReadMode, build_lut, extract_keys,
+                                      read_lut)
 
 
 def _lut_gemm_kernel(x_ref, packed_ref, alpha_ref, z_ref, o_ref, *,
@@ -116,7 +47,6 @@ def _lut_gemm_kernel(x_ref, packed_ref, alpha_ref, z_ref, o_ref, *,
     tb, tn = x_ref.shape
     tm = packed_ref.shape[1]
     tag = alpha_ref.shape[-1]
-    g = tn // mu
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -125,19 +55,14 @@ def _lut_gemm_kernel(x_ref, packed_ref, alpha_ref, z_ref, o_ref, *,
     x = x_ref[...].astype(jnp.float32)                    # [TB, TN]
 
     # -- 1. LUT generation (MXU): groups @ S^T ----------------------------
-    s = _sign_matrix(mu, half_lut, jnp.float32)           # [P, mu]
-    groups = x.reshape(tb * g, mu)
-    lut = lax.dot_general(groups, s,
-                          dimension_numbers=(((1,), (1,)), ((), ())),
-                          preferred_element_type=jnp.float32)
-    lut = lut.reshape(tb, g, -1)                          # [TB, G, P]
+    lut = build_lut(x, mu, half_lut)                      # [TB, G, P]
 
     # -- 2/3. per-plane RAC + alpha accumulate ----------------------------
     per_ag = group_size // mu
     acc = jnp.zeros((tb, tm), jnp.float32)
     for i in range(q):
-        keys = _extract_keys(packed_ref[i], mu)           # [TM, G]
-        vals = _read_lut(lut, keys, mu, half_lut, read_mode)   # [TB, TM, G]
+        keys = extract_keys(packed_ref[i], mu)            # [TM, G]
+        vals = read_lut(lut, keys, mu, half_lut, read_mode)    # [TB, TM, G]
         vals_ag = vals.reshape(tb, tm, tag, per_ag).sum(-1)    # [TB, TM, AG]
         alpha_i = alpha_ref[i].astype(jnp.float32)        # [TM, AG]
         acc = acc + jnp.einsum("bma,ma->bm", vals_ag, alpha_i,

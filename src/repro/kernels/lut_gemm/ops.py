@@ -13,19 +13,15 @@ tests and the tuner itself can pin exact launches.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bcq import BCQWeight
+from repro.core.plane import tile_operands
 from repro.tune import dispatch as _dispatch
 from . import lut_gemm as _k
-
-
-def _round_up(v: int, m: int) -> int:
-    return -(-v // m) * m
 
 
 def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4,
@@ -57,26 +53,8 @@ def lut_gemm(x: jax.Array, w: BCQWeight, *, mu: int = 4,
         block_m = cfg.block_m if block_m is None else block_m
         block_n = cfg.block_n if block_n is None else block_n
 
-    n_pad_w = w.packed.shape[-1] * 8          # weight-side padded N (x8)
-    q, m, _ = w.packed.shape
-    ag = w.alpha.shape[-1]
-
-    # pad to block multiples
-    bp = _round_up(b, block_b)
-    block_n = min(block_n, _round_up(n_pad_w, w.group_size))
-    npad = _round_up(n_pad_w, block_n)
-    block_m = min(block_m, _round_up(m, 8))
-    mp = _round_up(m, block_m)
-    agp = npad // w.group_size
-
-    xp = jnp.zeros((bp, npad), x2.dtype).at[:b, :n_logical].set(x2)
-    packed = w.packed
-    alpha = w.alpha
-    z = w.z
-    if npad != n_pad_w or mp != m or agp != ag:
-        packed = jnp.zeros((q, mp, npad // 8), jnp.uint8).at[:, :m, : n_pad_w // 8].set(packed)
-        alpha = jnp.zeros((q, mp, agp), alpha.dtype).at[:, :m, :ag].set(alpha)
-        z = jnp.zeros((mp, agp), z.dtype).at[:m, :ag].set(z)
+    xp, packed, alpha, z, b, m, block_m, block_n = tile_operands(
+        x2, w, block_b=block_b, block_m=block_m, block_n=block_n)
 
     y = _k.lut_gemm_tiled(
         xp, packed, alpha, z, mu=mu, half_lut=half_lut,

@@ -1,0 +1,6 @@
+from .ops import ternary_matmul
+from .ternary_matmul import ternary_matmul_tiled
+from .ref import dense_ref, ternary_ref
+
+__all__ = ["ternary_matmul", "ternary_matmul_tiled", "dense_ref",
+           "ternary_ref"]

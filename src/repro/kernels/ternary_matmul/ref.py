@@ -1,0 +1,72 @@
+"""Oracles for the ternary kernel: dense dequant + gathered LUT walk.
+
+``dense_ref`` is ground truth (dequantize -> FP32 matmul).
+``ternary_ref`` performs the exact evaluation the Pallas kernel claims:
+half-LUT build, in-kernel-style sign decode of the (sign, mask) planes
+into b1/b2 keys, *gathered* table reads, single-alpha accumulate.  The
+kernel must match it bit-for-bit when the arithmetic is exact (integer
+activations, power-of-two alphas) — the exactness matrix in
+tests/test_plane.py pins that.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_mod
+from repro.core import plane as plane_mod
+
+
+def dense_ref(x: jax.Array, w: plane_mod.PlaneBundle, out_dtype=None) -> jax.Array:
+    """Ground truth: dequantize then dense matmul (FP32 accumulate)."""
+    dense = plane_mod.dequantize(w, dtype=jnp.float32)       # [out, in]
+    y = jnp.einsum("...n,mn->...m", x.astype(jnp.float32), dense,
+                   preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def _derived_plane_bytes(packed: np.ndarray):
+    """(sign, mask) uint8 planes -> (b1, b2) BCQ plane bytes (host-side)."""
+    s = packed[0].astype(np.int32)
+    m = packed[1].astype(np.int32)
+    b1 = (s | (~m & 0xFF)) & 0xFF
+    b2 = s & m
+    return b1.astype(np.uint8), b2.astype(np.uint8)
+
+
+def ternary_ref(x: jax.Array, w: plane_mod.PlaneBundle, mu: int = 4,
+                out_dtype=None) -> jax.Array:
+    """Gathered-oracle evaluation of the ternary LUT datapath.
+
+    x: [..., in_features]. Returns [..., out_features].
+    """
+    if w.kind != "ternary":
+        raise ValueError(f"ternary_ref needs a ternary bundle, got {w.kind!r}")
+    if w.group_size % mu:
+        raise ValueError(f"group_size {w.group_size} must divide mu={mu}")
+    xf = x.astype(jnp.float32)
+    n_pad = w.packed.shape[-1] * 8
+    if xf.shape[-1] != n_pad:                                # zero-pad to match
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, n_pad - xf.shape[-1])])
+    lead = xf.shape[:-1]
+    xf2 = xf.reshape(-1, n_pad)                              # [B, N]
+
+    b1, b2 = _derived_plane_bytes(np.asarray(w.packed))
+    keys = lut_mod.keys_from_packed(
+        jnp.stack([jnp.asarray(b1), jnp.asarray(b2)]), mu)   # [2, M, G_mu]
+
+    table = lut_mod.build_half_lut(xf2, mu)                  # [B, G, 2^(mu-1)]
+
+    def read(keys_i):                                        # [M, G] -> [B, M, G]
+        return jax.vmap(
+            lambda t: lut_mod.decode_half_lut(
+                t[None].repeat(keys_i.shape[0], 0), keys_i, mu)
+        )(table)
+
+    per_ag = w.group_size // mu
+    n_ag = w.n_groups
+    vals = read(keys[0]) + read(keys[1])                     # [B, M, G_mu]
+    vals_ag = vals.reshape(*vals.shape[:-1], n_ag, per_ag).sum(-1)
+    y = jnp.einsum("bma,ma->bm", vals_ag, w.alpha[0] * 0.5)
+    return y.reshape(*lead, w.out_features).astype(out_dtype or x.dtype)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for the dedicated ternary (1.58-bit) fast path.
+
+The ternary bundle stores ONE sign plane + ONE nonzero-mask plane and a
+single shared-magnitude alpha row (``core.plane.PlaneBundle`` with
+``kind="ternary"``) — strictly fewer HBM bytes than the generic 2-plane
+BCQ encoding it replaces.  This kernel exploits that ±α structure
+in-kernel instead of riding the generic bit-serial path:
+
+  1. **half-LUT build** (§III-D/E): one half-size activation table per
+     mu-group, shared by both derived planes — the hFFLUT symmetry
+     LUT[p] = -LUT[2^mu-1-p] means ternary pays ONE table for what the
+     generic 2-bit path reads as two.
+  2. **in-kernel sign decode** (the paper's sign-decoding unit): the
+     BCQ planes b1 = sign | ~mask, b2 = sign & mask are derived with two
+     bitwise byte ops from the stored (sign, mask) bytes — no second
+     stored plane, no second alpha row (``lut_common.ternary_plane_bytes``).
+  3. **single-alpha accumulate**: y += (a/2) * (V1 + V2) per alpha
+     group; there is no offset term (ternary has none), so the z row,
+     its DMA and its epilogue einsum all disappear.
+
+Per-tile arithmetic vs the generic lut_gemm at q=2: one LUT build
+instead of one, two keyed reads (same), ONE alpha einsum instead of
+two, no offset einsum — plus 2/3 of the scale-row traffic and no z row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lut_common import (ReadMode, build_lut, extract_keys,
+                                      read_lut, ternary_plane_bytes)
+
+
+def _ternary_matmul_kernel(x_ref, packed_ref, alpha_ref, o_ref, *,
+                           mu: int, group_size: int, read_mode: ReadMode):
+    tb, tn = x_ref.shape
+    tm = packed_ref.shape[1]
+    tag = alpha_ref.shape[-1]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # [TB, TN]
+
+    # -- 1. one half-size LUT for both derived planes ---------------------
+    lut = build_lut(x, mu, half=True)                     # [TB, G, P/2]
+
+    # -- 2. sign decode: (sign, mask) bytes -> b1/b2 plane bytes ----------
+    b1, b2 = ternary_plane_bytes(packed_ref[0], packed_ref[1])
+    vals = (read_lut(lut, extract_keys(b1, mu), mu, True, read_mode)
+            + read_lut(lut, extract_keys(b2, mu), mu, True, read_mode))
+
+    # -- 3. single-alpha accumulate:  y += (a/2) (V1 + V2) ----------------
+    per_ag = group_size // mu
+    vals_ag = vals.reshape(tb, tm, tag, per_ag).sum(-1)   # [TB, TM, AG]
+    half_alpha = alpha_ref[0].astype(jnp.float32) * 0.5   # [TM, AG]
+    acc = jnp.einsum("bma,ma->bm", vals_ag, half_alpha,
+                     preferred_element_type=jnp.float32)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mu", "group_size", "read_mode", "block_b", "block_m",
+                     "block_n", "interpret", "out_dtype"),
+)
+def ternary_matmul_tiled(x, packed, alpha, *, mu: int = 4,
+                         group_size: int = 128, read_mode: ReadMode = "onehot",
+                         block_b: int = 8, block_m: int = 128,
+                         block_n: int = 512, interpret: bool = False,
+                         out_dtype=jnp.float32):
+    """Raw tiled kernel call. All dims must already divide the block sizes.
+
+    x: [B, N] fp; packed: uint8[2, M, N//8] (plane 0 = sign, plane 1 =
+    mask); alpha: f32[1, M, N//group_size].  Returns [B, M] out_dtype
+    (FP32 accumulation).
+    """
+    b, n = x.shape
+    q, m, _ = packed.shape
+    assert q == 2, f"ternary bundle stores sign+mask planes, got {q}"
+    assert alpha.shape[0] == 1, "ternary carries a single alpha row"
+    assert n % block_n == 0 and m % block_m == 0 and b % block_b == 0, (
+        f"shapes ({b},{m},{n}) must divide blocks "
+        f"({block_b},{block_m},{block_n})")
+    assert block_n % group_size == 0 and group_size % mu == 0
+    tag = block_n // group_size
+    grid = (b // block_b, m // block_m, n // block_n)
+
+    kernel = functools.partial(
+        _ternary_matmul_kernel, mu=mu, group_size=group_size,
+        read_mode=read_mode)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda bi, mi, ni: (bi, ni)),
+            pl.BlockSpec((2, block_m, block_n // 8),
+                         lambda bi, mi, ni: (0, mi, ni)),
+            pl.BlockSpec((1, block_m, tag), lambda bi, mi, ni: (0, mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_m), lambda bi, mi, ni: (bi, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, m), out_dtype),
+        interpret=interpret,
+    )(x, packed, alpha)

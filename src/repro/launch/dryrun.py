@@ -85,7 +85,7 @@ def build_cell(arch: str, shape_name: str, *, quant=4, backend="bcq_xla",
     from repro.models.module import abstract_params
     from repro.optim import adamw
     from repro.parallel import sharding as shd
-    from repro.quantize import abstract_quantized_params
+    from repro.quant.ptq import abstract_quantized_params
     from repro.launch.mesh import make_production_mesh
 
     cfg = get_config(arch)
@@ -106,7 +106,8 @@ def build_cell(arch: str, shape_name: str, *, quant=4, backend="bcq_xla",
         overrides["n_layers"] = n_layers
         overrides["scan_layers"] = False
     if shape.kind != "train" and quant:
-        overrides["gemm_backend"] = backend
+        from repro.quant.spec import QuantSpec
+        overrides["quant"] = QuantSpec(bits=quant, backend=backend)
     if shape.kind != "train" and kv_bits != 16:
         overrides["kv_cache_bits"] = kv_bits
     model_par = 16

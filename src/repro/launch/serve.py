@@ -10,8 +10,10 @@ file fields).  Highlights:
   * ``--bits 2.4`` (fractional) runs sensitivity-driven mixed precision
     via ``core.mixed_precision.allocate_bits`` (paper Fig. 17); the
     printed manifest reports the achieved average.
-  * ``--method ternary`` serves TWN-style {-a,0,+a} weights on the same
-    engine (2 BCQ planes).
+  * ``--method ternary`` serves {-a, 0, +a} weights as a plane-native
+    sign+mask bundle (one alpha row, no offset) routed to the dedicated
+    ``ternary_matmul`` kernel where native; ``--bits 1.58`` instead
+    mixes ternary/2/3-bit layers under a log2(3) average-bit budget.
   * ``--bits 0`` explicitly serves the dense FP model (no silent skip).
   * ``--save-quantized DIR`` / ``--load-quantized DIR`` persist / reuse
     the quantized tree, so relaunches skip minutes of PTQ solver time;
@@ -108,14 +110,17 @@ def main():
     # --- quantization spec (repro.quant) -------------------------------
     ap.add_argument("--bits", type=float, default=None,
                     help="weight bits; fractional (e.g. 2.4) -> mixed "
-                         "precision; 0 -> serve dense FP (default: 4)")
+                         "precision; sub-2 budgets (e.g. 1.58) mix "
+                         "ternary/2/3-bit layers; 0 -> serve dense FP "
+                         "(default: 4)")
     ap.add_argument("--method", "--format", dest="format", default=None,
                     choices=["bcq", "rtn", "uniform", "ternary"],
                     help="quant format (registry: repro.quant.formats)")
     ap.add_argument("--backend", default=None,
                     help="execution preference (auto | dense | bcq_xla | "
-                         "lut_pallas | mxu_pallas); capability negotiation "
-                         "falls back down the chain per weight")
+                         "lut_pallas | mxu_pallas | ternary_pallas); "
+                         "capability negotiation falls back down the "
+                         "chain per weight")
     ap.add_argument("--group-size", type=int, default=None,
                     help="scale group size along the input dim (default 128)")
     ap.add_argument("--iters", type=int, default=None,

@@ -16,7 +16,7 @@ static for pjit):
 
 FIGLUT integration: every expert weight is a quantizable linear (the
 bit-plane format is per-2D-matrix, so the stacked [E, f, d] expert bank is
-quantized per expert by ``repro.quantize``).
+quantized per expert by ``repro.quant.ptq``).
 """
 from __future__ import annotations
 
@@ -56,12 +56,17 @@ def _expert_bank(w, shape3d):
     """
     if isinstance(w, BCQWeight):
         if w.packed.ndim == 4:          # [E, q, out, in/8]
-            e = w.packed.shape[0]
-            sub = lambda p, a, z: dequantize(
-                BCQWeight(packed=p, alpha=a, z=z, group_size=w.group_size,
-                          in_features=w.in_features,
-                          out_features=w.out_features), jnp.bfloat16)
-            dense = jax.vmap(sub)(w.packed, w.alpha, w.z)
+            def sub(p, a, z=None):
+                return dequantize(
+                    BCQWeight(packed=p, alpha=a, z=z,
+                              group_size=w.group_size,
+                              in_features=w.in_features,
+                              out_features=w.out_features, kind=w.kind),
+                    jnp.bfloat16)
+            if w.z is None:             # ternary banks carry no offset row
+                dense = jax.vmap(sub)(w.packed, w.alpha)
+            else:
+                dense = jax.vmap(sub)(w.packed, w.alpha, w.z)
             return dense.reshape(shape3d)
         return dequantize(w, jnp.bfloat16).reshape(shape3d)
     return w

@@ -115,9 +115,10 @@ def _bcq_shardings(leaf: BCQWeight, axes, mesh: Mesh, rules: dict):
                                             mesh, rules)),
         alpha=NamedSharding(mesh, spec_for(leaf.alpha.shape, alpha_axes,
                                            mesh, rules)),
-        z=NamedSharding(mesh, spec_for(leaf.z.shape, z_axes, mesh, rules)),
+        z=(NamedSharding(mesh, spec_for(leaf.z.shape, z_axes, mesh, rules))
+           if leaf.z is not None else None),
         group_size=leaf.group_size, in_features=leaf.in_features,
-        out_features=leaf.out_features,
+        out_features=leaf.out_features, kind=leaf.kind,
     )
 
 

@@ -15,13 +15,13 @@ Only :mod:`repro.quant.spec` (stdlib-only) loads eagerly — the heavier
 submodules resolve lazily via PEP 562 so ``import repro.configs`` (which
 embeds QuantSpec in ModelConfig) stays light and cycle-free.
 """
-from repro.quant.spec import QuantSpec, canonical_format
+from repro.quant.spec import TERNARY_BITS, QuantSpec, canonical_format
 
 _LAZY = {
     # formats
     "FormatInfo": "formats", "available_formats": "formats",
-    "get_format": "formats", "register_format": "formats",
-    "quantize_ternary": "formats",
+    "format_for_bits": "formats", "get_format": "formats",
+    "register_format": "formats", "quantize_ternary": "formats",
     # backends
     "BackendInfo": "backends", "available_backends": "backends",
     "execute_linear": "backends", "fallback_chain": "backends",
@@ -34,7 +34,7 @@ _LAZY = {
     "load_quantized": "checkpoint", "save_quantized": "checkpoint",
 }
 
-__all__ = ["QuantSpec", "canonical_format", *sorted(_LAZY)]
+__all__ = ["QuantSpec", "TERNARY_BITS", "canonical_format", *sorted(_LAZY)]
 
 
 def __getattr__(name):

@@ -9,7 +9,7 @@ Ties the pieces together:
      explicit per-layer ``spec.overrides`` pins applied last;
   2. quantize the tree through the format registry
      (:mod:`repro.quant.formats`) with the scan/expert stacking rules of
-     :mod:`repro.quantize.ptq`;
+     :mod:`repro.quant.ptq`;
   3. return the quantized tree *and* a :class:`QuantManifest` — per-layer
      format/plane-bits/bytes plus achieved parameter-weighted average
      bits — which the launcher prints, CI uploads, and the quantized
@@ -106,9 +106,15 @@ def plan_bits(linears: Mapping[str, Any], spec: QuantSpec,
 
     if spec.is_fractional:
         # probe with the format that will actually be applied — BCQ's
-        # reconstruction error misranks layers for rtn/other formats
+        # reconstruction error misranks layers for rtn/other formats,
+        # and sub-2-bit candidates (the ternary sentinel) must be
+        # measured with the ternary quantizer
+        def _probe_quantize(w2, *, bits, group_size, iters):
+            f = formats_mod.format_for_bits(spec.format, bits)
+            return f.quantize(w2, bits=f.plane_bits(max(bits, 1)),
+                              group_size=group_size, iters=iters)
         sens = functools.partial(mp.layer_sensitivity, iters=2, max_rows=192,
-                                 quantizer=fmt.quantize)
+                                 quantizer=_probe_quantize)
         plan = mp.allocate_bits(linears, target_avg_bits=spec.bits,
                                 candidates=spec.candidate_bits,
                                 group_size=spec.group_size, x_cal=x_cal,
@@ -118,7 +124,7 @@ def plan_bits(linears: Mapping[str, Any], spec: QuantSpec,
 
     for key, b in spec.overrides_map.items():
         if key in plan:
-            plan[key] = int(b)
+            plan[key] = float(b) if float(b) < 2 else int(b)
     return plan
 
 
@@ -137,7 +143,7 @@ def quantize_model(params, spec: QuantSpec, axes_tree=None, *,
     supplies per-layer calibration activations for the mixed-precision
     sensitivity probe.
     """
-    from repro.quantize import ptq  # lazy: ptq uses the format registry
+    from repro.quant import ptq  # lazy: ptq uses the format registry
 
     fmt = formats_mod.get_format(spec.format)
     linears = ptq.collect_linears(params, axes_tree)
@@ -146,7 +152,7 @@ def quantize_model(params, spec: QuantSpec, axes_tree=None, *,
     qparams = ptq.quantize_model(
         params, axes_tree, bits=fmt.plane_bits(max(spec.bits, 1)),
         method=spec.format, group_size=spec.group_size, iters=spec.iters,
-        bit_map=plan, _from_spec=True)
+        bit_map=plan)
 
     manifest = build_manifest(qparams, spec, plan, linears,
                               axes_tree=axes_tree)
@@ -155,9 +161,8 @@ def quantize_model(params, spec: QuantSpec, axes_tree=None, *,
 
 def build_manifest(qparams, spec: QuantSpec, plan: Mapping[str, int],
                    linears: Mapping[str, Any], axes_tree=None) -> QuantManifest:
-    from repro.quantize import ptq
+    from repro.quant import ptq  # lazy: ptq uses the format registry
 
-    fmt = formats_mod.get_format(spec.format)
     quantized = {"/".join(map(str, p)): leaf
                  for p, leaf in ptq._walk(qparams)
                  if isinstance(leaf, BCQWeight)}
@@ -170,13 +175,17 @@ def build_manifest(qparams, spec: QuantSpec, plan: Mapping[str, int],
             if key in linears else None
         n = int(np.prod(shape)) if shape else \
             int(np.prod(wq.packed.shape[:-3])) * wq.out_features * wq.in_features
+        # nbytes() reads the bundle that was actually stored — for
+        # ternary that is sign+mask planes, ONE alpha row and no offset,
+        # so the manifest no longer overstates ternary model size
         qb = int(wq.nbytes())
         layers.append({
-            "path": key, "format": spec.format,
+            "path": key,
+            "format": "ternary" if wq.kind == "ternary" else spec.format,
             "plane_bits": planes,
             # information-theoretic width (ternary stores 2 planes but
             # carries log2(3) bits); == plane_bits for dense-coded formats
-            "effective_bits": float(fmt.effective_bits or planes),
+            "effective_bits": float(wq.effective_bits),
             "group_size": int(wq.group_size),
             "shape": list(shape) if shape else None,
             "dense_bytes": 2 * n, "quant_bytes": qb,

@@ -19,9 +19,13 @@ Each registered backend declares
     :func:`repro.tune.dispatch.kernel_supports` for the Pallas kernels).
 
 Resolution walks the preference's fallback chain —
-``mxu_pallas``/``lut_pallas`` -> ``bcq_xla`` -> ``dense`` — and returns the
-first backend that is usable and supports the weight, so a new format or
-an odd group size degrades gracefully instead of crashing a serve tick.
+``ternary_pallas``/``mxu_pallas``/``lut_pallas`` -> ``bcq_xla`` ->
+``dense`` — and returns the first backend that is usable and supports the
+weight, so a new format or an odd group size degrades gracefully instead
+of crashing a serve tick.  ``supports`` is *kind-aware*: the dedicated
+ternary kernel only claims ``kind="ternary"`` bundles and the generic
+plane kernels only ``kind="bcq"``, while the XLA fallbacks execute any
+kind through the kind-aware ``plane.dequantize``.
 
 Dense (unquantized) array leaves resolve to the plain einsum path, making
 this the single dispatch point for *every* linear in the model stack.
@@ -55,11 +59,15 @@ class BackendInfo:
 
 _REGISTRY: Dict[str, BackendInfo] = {}
 
-#: resolution order for ``backend="auto"`` (best native first)
-AUTO_CHAIN: Tuple[str, ...] = ("mxu_pallas", "lut_pallas", "bcq_xla", "dense")
+#: resolution order for ``backend="auto"`` (best native first).
+#: ``ternary_pallas`` heads the chain but only claims ``kind="ternary"``
+#: bundles, so generic BCQ weights resolve exactly as before.
+AUTO_CHAIN: Tuple[str, ...] = ("ternary_pallas", "mxu_pallas", "lut_pallas",
+                               "bcq_xla", "dense")
 
 #: explicit-preference fallback chains (first entry = the preference)
 FALLBACK_CHAINS: Dict[str, Tuple[str, ...]] = {
+    "ternary_pallas": ("ternary_pallas", "bcq_xla", "dense"),
     "mxu_pallas": ("mxu_pallas", "bcq_xla", "dense"),
     "lut_pallas": ("lut_pallas", "bcq_xla", "dense"),
     "bcq_xla": ("bcq_xla", "dense"),
@@ -159,13 +167,20 @@ def _supports_any(w: BCQWeight) -> bool:
     return True
 
 
+def _supports_bcq_planes(w: BCQWeight) -> bool:
+    # the per-plane grouped contraction reads independent ±1 planes;
+    # ternary (sign+mask) bundles take the kind-aware fused paths instead
+    return w.kind == "bcq"
+
+
 def _supports_pallas(kernel: str):
     def check(w: BCQWeight) -> bool:
         from repro.tune.dispatch import kernel_supports
         if w.packed.ndim != 3:          # stacked leaves only run inside scan
             return False
         return kernel_supports(kernel, m=w.out_features, n=w.in_features,
-                               group_size=w.group_size, bits=w.bits)
+                               group_size=w.group_size, bits=w.bits,
+                               kind=w.kind)
     return check
 
 
@@ -187,7 +202,8 @@ register_backend(BackendInfo(
 
 register_backend(BackendInfo(
     name="bcq_xla_planes", execute=_exec("bcq_xla_planes"),
-    supports=_supports_any, available=lambda: True, native=lambda: False,
+    supports=_supports_bcq_planes, available=lambda: True,
+    native=lambda: False,
     description="per-plane grouped-contraction XLA variant"))
 
 register_backend(BackendInfo(
@@ -201,3 +217,10 @@ register_backend(BackendInfo(
     supports=_supports_pallas("bcq_matmul"),
     available=lambda: True, native=_on_tpu, kernel="bcq_matmul",
     description="dequant-in-VMEM MXU Pallas kernel (interpret off-TPU)"))
+
+register_backend(BackendInfo(
+    name="ternary_pallas", execute=_exec("ternary_pallas"),
+    supports=_supports_pallas("ternary_matmul"),
+    available=lambda: True, native=_on_tpu, kernel="ternary_matmul",
+    description="dedicated 1.58-bit kernel: in-kernel sign decode onto "
+                "the half-LUT, single alpha row (interpret off-TPU)"))

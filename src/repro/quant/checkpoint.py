@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bcq import BCQWeight
+from repro.core.plane import KINDS
 from repro.quant.api import QuantManifest
 from repro.quant.spec import QuantSpec
 from repro.train import checkpoint as ckpt
@@ -26,12 +27,19 @@ _BCQ_TAG = "__bcq_weight__"
 
 def _encode(tree):
     if isinstance(tree, BCQWeight):
-        return {_BCQ_TAG: {
-            "packed": tree.packed, "alpha": tree.alpha, "z": tree.z,
+        # the offset row is optional (ternary has none) and the layout
+        # kind rides along as an index into plane.KINDS — the numpy
+        # checkpointer only understands array leaves
+        bundle = {
+            "packed": tree.packed, "alpha": tree.alpha,
             "group_size": np.int64(tree.group_size),
             "in_features": np.int64(tree.in_features),
             "out_features": np.int64(tree.out_features),
-        }}
+            "kind": np.int64(KINDS.index(tree.kind)),
+        }
+        if tree.z is not None:
+            bundle["z"] = tree.z
+        return {_BCQ_TAG: bundle}
     if isinstance(tree, dict):
         return {k: _encode(v) for k, v in tree.items()}
     if isinstance(tree, (list, tuple)):
@@ -47,10 +55,13 @@ def _decode(tree):
             return BCQWeight(
                 packed=jnp.asarray(d["packed"], jnp.uint8),
                 alpha=jnp.asarray(d["alpha"], jnp.float32),
-                z=jnp.asarray(d["z"], jnp.float32),
+                z=(jnp.asarray(d["z"], jnp.float32)
+                   if d.get("z") is not None else None),
                 group_size=int(d["group_size"]),
                 in_features=int(d["in_features"]),
-                out_features=int(d["out_features"]))
+                out_features=int(d["out_features"]),
+                # pre-kind checkpoints carry no field -> "bcq" (index 0)
+                kind=KINDS[int(d.get("kind", 0))])
         return {k: _decode(v) for k, v in tree.items()}
     if isinstance(tree, (list, tuple)):
         out = [_decode(v) for v in tree]

@@ -1,18 +1,21 @@
-"""Weight-format registry: every format lowers into BCQ bit-planes.
+"""Weight-format registry: every format lowers into a plane bundle.
 
-FIGLUT's engine executes *one* representation — packed ±1 planes with
-per-(row, group) scales (``core.bcq.BCQWeight``) — and the paper's claim
-that a fixed design "efficiently supports different bit precisions and
-quantization methods" is realized in software by mapping every supported
-format into that representation at quantize time:
+FIGLUT's engine executes *one* representation — packed sign planes with
+per-(row, group) scales (``core.plane.PlaneBundle``) — and the paper's
+claim that a fixed design "efficiently supports different bit precisions
+and quantization methods" is realized in software by mapping every
+supported format into that representation at quantize time:
 
   * ``bcq``     — alternating non-uniform BCQ (ShiftAddLLM-class solver);
   * ``rtn``     — round-to-nearest *uniform* quantization mapped exactly
                   into BCQ(+offset) planes (Eq. (3); runs OPTQ/AWQ/RTN
                   checkpoints on the same engine);
-  * ``ternary`` — {-a, 0, +a} weights (TWN-style threshold) encoded into
-                  two planes with alpha_1 = alpha_2 = a/2, so
-                  (a/2)(b_1 + b_2) ∈ {-a, 0, +a} reconstructs exactly.
+  * ``ternary`` — {-a, 0, +a} weights with MSE-optimal (octav-style
+                  alternating fixed-point) clipping, emitted as a
+                  first-class ``kind="ternary"`` bundle: one sign plane
+                  + one nonzero-mask plane, a single shared-magnitude
+                  alpha row and no offset — the layout the dedicated
+                  ``kernels/ternary_matmul`` Pallas kernel consumes.
 
 New formats register with :func:`register_format` and immediately work
 through ``quantize_model``/``linear_apply`` without touching model code —
@@ -28,19 +31,21 @@ import jax.numpy as jnp
 
 from repro.core import bcq as bcq_mod
 from repro.core.bcq import BCQWeight, pack_planes
+from repro.core.plane import TERNARY_BITS, PlaneBundle
 
 
 @dataclasses.dataclass(frozen=True)
 class FormatInfo:
     """One registered weight format.
 
-    ``quantize(w2d, bits, group_size, iters) -> BCQWeight`` must be pure
-    JAX (it runs under ``lax.map`` for scan-stacked leaves).
+    ``quantize(w2d, bits, group_size, iters) -> PlaneBundle`` must be
+    pure JAX (it runs under ``lax.map`` for scan-stacked leaves).
     ``fixed_plane_bits`` pins the stored plane count regardless of the
-    requested bits (ternary is always 2 planes); ``None`` means the
-    request decides.  ``effective_bits`` is the information-theoretic
-    width reported in manifests (ternary stores 2 planes but carries
-    log2(3) ≈ 1.58 bits).
+    requested bits (ternary is always 2 planes: sign + mask); ``None``
+    means the request decides.  ``effective_bits`` is the
+    information-theoretic width reported in manifests and used by the
+    mixed-precision planner (ternary stores 2 planes but carries
+    log2(3) ≈ 1.585 bits).
     """
 
     name: str
@@ -76,6 +81,19 @@ def available_formats() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def format_for_bits(name: str, bits: float) -> FormatInfo:
+    """Resolve the format a planner bit-width lands on.
+
+    Integer widths keep the requested format; the fractional
+    :data:`~repro.core.plane.TERNARY_BITS` sentinel (anything below 2)
+    selects the ternary format — this is how a mixed-precision plan
+    mixes ternary/2/3/4-bit layers through one dispatch (MxGLUT).
+    """
+    if bits < 2:
+        return get_format("ternary")
+    return get_format(name)
+
+
 # ---------------------------------------------------------------------------
 # built-in formats
 # ---------------------------------------------------------------------------
@@ -92,22 +110,24 @@ def _quantize_rtn(w2d, *, bits: int, group_size: int, iters: int = 0) -> BCQWeig
 
 def quantize_ternary(w_dense: jax.Array, *, bits: int = 2,
                      group_size: int = 128, iters: int = 0,
-                     threshold: float = 0.7) -> BCQWeight:
-    """TWN-style ternarization encoded as 2-plane BCQ.
+                     clip_iters: int = 12) -> PlaneBundle:
+    """MSE-optimal ternarization emitted as a ``kind="ternary"`` bundle.
 
-    Per (row, group): delta = threshold * mean|w|; weights above delta keep
-    their sign and share the magnitude a = mean(|w| over the kept set);
-    the rest snap to 0.  The plane encoding
+    Per (row, group) the {-a, 0, +a} codebook that minimizes
+    ||w - a·t||² satisfies a fixed point (octav-style alternating
+    optimal clipping, the ternary Lloyd-Max condition):
 
-        t = +1 -> (b1, b2) = (+1, +1)
-        t =  0 -> (b1, b2) = (+1, -1)
-        t = -1 -> (b1, b2) = (-1, -1)
+        keep set  S(a) = { |w| > a/2 }          (nearest-codeword rule)
+        magnitude a    = mean(|w| over S(a))    (LS-optimal given S)
 
-    with alpha_1 = alpha_2 = a/2 and z = 0 reconstructs (a/2)(b1 + b2)
-    = a*t exactly, so the fixed bit-serial engine executes ternary
-    checkpoints with zero representational error beyond ternarization
-    itself.  ``bits``/``iters`` are accepted for registry-signature
-    uniformity and ignored (ternary is always 2 planes).
+    iterated from a₀ = mean|w| — strictly better than the fixed
+    TWN 0.7·mean|w| threshold it replaces, and exact on inputs that are
+    already ternary.  The bundle layout is plane 0 = sign bit
+    (1 encodes +), plane 1 = nonzero mask (1 encodes keep), a single
+    alpha row ``a`` and ``z=None`` — strictly fewer stored bytes than
+    the generic 2-plane BCQ encoding (one scale row instead of two,
+    no offset row).  ``bits``/``iters`` are accepted for
+    registry-signature uniformity and ignored.
     """
     del bits, iters
     w = jnp.asarray(w_dense, jnp.float32)
@@ -122,20 +142,20 @@ def quantize_ternary(w_dense: jax.Array, *, bits: int = 2,
     wg = w.reshape(out, n_groups, g)
 
     absw = jnp.abs(wg)
-    delta = threshold * absw.mean(axis=-1, keepdims=True)       # [out, G, 1]
-    mask = absw > delta
-    cnt = jnp.maximum(mask.sum(axis=-1), 1)                     # [out, G]
-    a = (absw * mask).sum(axis=-1) / cnt                        # magnitude
-    t = jnp.sign(wg) * mask                                     # {-1, 0, +1}
+    a = absw.mean(axis=-1)                                      # [out, G]
+    for _ in range(clip_iters):
+        mask = absw > (a[..., None] / 2.0)
+        cnt = jnp.maximum(mask.sum(axis=-1), 1)
+        a = (absw * mask).sum(axis=-1) / cnt
+    mask = absw > (a[..., None] / 2.0)
 
-    p1 = jnp.where(t < 0, -1.0, 1.0)
-    p2 = jnp.where(t > 0, 1.0, -1.0)
-    planes = jnp.stack([p1, p2]).reshape(2, out, n_pad)
-    alpha = jnp.broadcast_to((a / 2.0)[None], (2, out, n_groups))
-    z = jnp.zeros((out, n_groups), jnp.float32)
-    return BCQWeight(packed=pack_planes(planes),
-                     alpha=alpha.astype(jnp.float32), z=z,
-                     group_size=g, in_features=n, out_features=out)
+    sign = jnp.where(wg >= 0, 1.0, -1.0)
+    keep = jnp.where(mask, 1.0, -1.0)                 # bit 1 = nonzero
+    planes = jnp.stack([sign, keep]).reshape(2, out, n_pad)
+    return PlaneBundle(packed=pack_planes(planes),
+                       alpha=a[None].astype(jnp.float32), z=None,
+                       group_size=g, in_features=n, out_features=out,
+                       kind="ternary")
 
 
 register_format(FormatInfo(
@@ -146,5 +166,6 @@ register_format(FormatInfo(
     description="uniform round-to-nearest, exact BCQ(+offset) mapping"))
 register_format(FormatInfo(
     name="ternary", quantize=quantize_ternary, fixed_plane_bits=2,
-    effective_bits=1.585,
-    description="TWN-style {-a,0,+a} encoded as 2 BCQ planes (alpha/2 each)"))
+    effective_bits=TERNARY_BITS,
+    description="octav-clipped {-a,0,+a} as sign+mask plane bundle "
+                "(1 alpha row, no offset; dedicated ternary_matmul kernel)"))

@@ -129,7 +129,7 @@ def capture_calibration(model, params, batches, max_samples: int = 256):
     WikiText-2 calibration set the same way).
     """
     from repro.core import quantized_linear as ql
-    from repro.quantize.ptq import _walk, _is_quant_leaf
+    from repro.quant.ptq import _walk, _is_quant_leaf
 
     id2path = {}
     for path, leaf in _walk(params):
@@ -164,7 +164,7 @@ def optq_quantize_model(params, axes_tree, calib_fn, *, bits=4,
     the weight at ``path`` (callers typically capture layer inputs with a
     forward hook pass; benchmarks use input-distribution surrogates).
     """
-    from repro.quantize.ptq import _walk, _set_path, _is_quant_leaf, _axes_of
+    from repro.quant.ptq import _walk, _set_path, _is_quant_leaf, _axes_of
     out = params
     for path, leaf in list(_walk(params)):
         axes = _axes_of(axes_tree, path)

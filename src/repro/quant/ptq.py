@@ -1,11 +1,17 @@
-"""Whole-model post-training quantization into the FIGLUT BCQ format.
+"""Whole-model post-training quantization into plane bundles.
 
 Walks a params tree, finds linear weights by leaf name, and replaces each
-with a :class:`BCQWeight` — after which every ``linear_apply`` call site
-executes the LUT/BCQ path of the configured backend.  Supports:
+with a :class:`~repro.core.plane.PlaneBundle` — after which every
+``linear_apply`` call site executes the LUT/BCQ/ternary path of the
+configured backend.  This is the internal PTQ engine behind the
+declarative entry point ``repro.quant.quantize_model(params, QuantSpec,
+axes)``.  Supports:
 
-  * per-layer bit maps (mixed precision, Fig. 17),
-  * "bcq" (alternating non-uniform) or "rtn" (uniform-as-BCQ) methods,
+  * per-layer bit maps (mixed precision, Fig. 17) — fractional widths
+    below 2 (the :data:`~repro.core.plane.TERNARY_BITS` sentinel) route
+    that layer onto the ternary format (MxGLUT-style format mixing),
+  * "bcq" (alternating non-uniform), "rtn" (uniform-as-BCQ) and
+    "ternary" (sign+mask bundle) methods,
   * scan-stacked params ([L, out, in] -> packed [L, q, out, in/8] so
     lax.scan still slices layer-by-layer),
   * expert banks ([E, f, d] folded to [E*f, d]; rows are independent so
@@ -128,11 +134,15 @@ def _lead_batch(axes, ndim):
 
 
 def _quantize_leaf(w, axes, bits, method, group_size, iters):
-    """Quantize one weight leaf, handling stacked leading batch dims."""
+    """Quantize one weight leaf, handling stacked leading batch dims.
+
+    ``bits`` may be fractional: widths below 2 select the ternary format
+    regardless of ``method`` (the mixed-precision planner's sentinel).
+    """
     # format registry lookup (lazy import: repro.quant.api imports this
-    # module); every registered format lowers into BCQWeight planes
-    from repro.quant.formats import get_format
-    fmt = get_format(method)
+    # module); every registered format lowers into PlaneBundle planes
+    from repro.quant.formats import format_for_bits
+    fmt = format_for_bits(method, bits)
     nb = _lead_batch(axes, w.ndim)
 
     def quant2d(w2):
@@ -147,37 +157,32 @@ def _quantize_leaf(w, axes, bits, method, group_size, iters):
         stacked = jax.lax.map(lambda wi: quant2d(wi), w3)
         unflat = lambda a: a.reshape(*lead, *a.shape[1:])
         return BCQWeight(packed=unflat(stacked.packed),
-                         alpha=unflat(stacked.alpha), z=unflat(stacked.z),
+                         alpha=unflat(stacked.alpha),
+                         z=None if stacked.z is None else unflat(stacked.z),
                          group_size=int(group_size),
-                         in_features=cols, out_features=rows)
+                         in_features=cols, out_features=rows,
+                         kind=stacked.kind)
     rows = int(np.prod(w.shape[:-1]))
     return quant2d(w.reshape(rows, w.shape[-1]).astype(jnp.float32))
 
 
 def quantize_model(params, axes_tree=None, *, bits=4, method: str = "bcq",
                    group_size: int = 128, iters: int = 5,
-                   bit_map: Optional[Mapping[str, int]] = None,
-                   _from_spec: bool = False):
-    """Replace every quantizable linear with BCQWeight.
+                   bit_map: Optional[Mapping[str, float]] = None):
+    """Replace every quantizable linear with a PlaneBundle.
 
     bit_map: optional {'path/like/this': bits} per-layer override (mixed
-    precision).  axes_tree: logical-axes tree (Model.axes()) used to detect
-    scan-stacked weights; optional for unrolled models.
+    precision; fractional widths below 2 select ternary).  axes_tree:
+    logical-axes tree (Model.axes()) used to detect scan-stacked
+    weights; optional for unrolled models.
 
-    .. deprecated:: Loose ``bits/method/group_size/iters`` kwargs are the
-       legacy surface, kept for one release.  Prefer the declarative
-       entry point, which also plans mixed precision and returns a
-       manifest::
+    This is the PTQ *engine*; the public surface is the declarative
+    entry point, which also plans mixed precision and returns a
+    manifest::
 
-           from repro.quant import QuantSpec, quantize_model
-           qparams, manifest = quantize_model(params, QuantSpec(...), axes)
+        from repro.quant import QuantSpec, quantize_model
+        qparams, manifest = quantize_model(params, QuantSpec(...), axes)
     """
-    if not _from_spec:
-        import warnings
-        warnings.warn(
-            "repro.quantize.quantize_model(bits=, method=, ...) is "
-            "deprecated; use repro.quant.quantize_model(params, QuantSpec)",
-            DeprecationWarning, stacklevel=2)
     out = params
     for path, leaf in list(_walk(params)):
         axes = _axes_of(axes_tree, path) if axes_tree is not None else None

@@ -40,6 +40,11 @@ import json
 import math
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
+# information rate of the ternary format, log2(3) — kept as a literal so
+# this module stays dependency-free (core.plane.TERNARY_BITS is the same
+# value and the two are asserted equal in tests)
+TERNARY_BITS = 1.585
+
 # alias map kept here (not in the registry) so the spec module stays
 # dependency-free; formats.py validates registry membership at quantize time
 _FORMAT_ALIASES = {"uniform": "rtn", "int": "rtn", "nonuniform": "bcq"}
@@ -57,30 +62,44 @@ class QuantSpec:
     group_size: int = 128
     iters: int = 5
     backend: str = "auto"
-    candidates: Tuple[int, ...] = ()
-    overrides: Tuple[Tuple[str, int], ...] = ()
+    candidates: Tuple[float, ...] = ()
+    overrides: Tuple[Tuple[str, float], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "format", canonical_format(self.format))
         if self.bits is None:
             object.__setattr__(self, "bits",
-                               2.0 if self.format == "ternary" else 4.0)
-        elif self.format == "ternary" and float(self.bits) != 2:
-            # never silently serve 2-plane ternary as "N-bit" results
-            raise ValueError(
-                f"format 'ternary' always stores 2 planes; bits="
-                f"{self.bits:g} conflicts (omit bits or pass 2)")
+                               TERNARY_BITS if self.format == "ternary"
+                               else 4.0)
+        elif self.format == "ternary":
+            # ternary carries log2(3) ≈ 1.585 bits/weight in 2 stored
+            # planes (sign + mask); accept the rate spellings and the
+            # stored-plane count, reject anything else so 2-plane
+            # ternary is never silently served as "N-bit" results
+            if float(self.bits) in (2.0, 1.58, TERNARY_BITS):
+                object.__setattr__(self, "bits", TERNARY_BITS)
+            else:
+                raise ValueError(
+                    f"format 'ternary' stores 2 planes at rate log2(3); "
+                    f"bits={self.bits:g} conflicts (omit bits, or pass "
+                    f"1.58/1.585/2)")
         object.__setattr__(self, "bits", float(self.bits))
-        if isinstance(self.overrides, Mapping):
-            object.__setattr__(
-                self, "overrides",
-                tuple(sorted((str(k), int(v)) for k, v in self.overrides.items())))
-        else:
-            object.__setattr__(
-                self, "overrides",
-                tuple(sorted((str(k), int(v)) for k, v in self.overrides)))
-        object.__setattr__(self, "candidates",
-                           tuple(int(c) for c in self.candidates))
+        if self.bits == 1.58:
+            # the colloquial "1.58-bit" spelling names the same log2(3)
+            # rate; canonicalize so plans and cache keys agree
+            object.__setattr__(self, "bits", TERNARY_BITS)
+        pairs = (self.overrides.items()
+                 if isinstance(self.overrides, Mapping) else self.overrides)
+        # sub-2 widths are the fractional ternary sentinel and must keep
+        # their float spelling; integer widths stay ints for readability
+        _w = lambda v: float(v) if float(v) < 2 else int(v)
+        object.__setattr__(
+            self, "overrides",
+            tuple(sorted((str(k), _w(v)) for k, v in pairs)))
+        object.__setattr__(
+            self, "candidates",
+            tuple(float(c) if float(c) < 2 else int(c)
+                  for c in self.candidates))
         if self.bits < 0:
             raise ValueError(f"bits must be >= 0, got {self.bits}")
         if self.group_size <= 0:
@@ -91,8 +110,11 @@ class QuantSpec:
     # ------------------------------------------------------------------
     @property
     def is_fractional(self) -> bool:
-        """True when ``bits`` is a fractional average -> mixed precision."""
-        return self.bits != int(self.bits)
+        """True when ``bits`` is a fractional average -> mixed precision.
+
+        The ternary *format* is excluded: its fractional rate names a
+        fixed layout, not a mixed-precision request."""
+        return self.format != "ternary" and self.bits != int(self.bits)
 
     @property
     def is_mixed(self) -> bool:
@@ -104,12 +126,17 @@ class QuantSpec:
         return int(self.bits)
 
     @property
-    def candidate_bits(self) -> Tuple[int, ...]:
+    def candidate_bits(self) -> Tuple[float, ...]:
         """Mixed-precision candidate set (explicit or derived from bits)."""
         if self.candidates:
             return tuple(sorted(set(self.candidates)))
-        lo = max(1, math.floor(self.bits))
         hi = math.ceil(self.bits)
+        if self.bits < 2:
+            # sub-2-bit budgets admit the ternary fast path as the low
+            # candidate (e.g. 1.58 -> ternary/2/3-bit per-layer mixing);
+            # budgets >= 2 keep the historical integer ladder
+            return tuple(sorted({TERNARY_BITS, max(hi, 2), max(hi, 2) + 1}))
+        lo = max(1, math.floor(self.bits))
         return tuple(sorted({lo, hi, hi + 1}))
 
     @property
@@ -121,16 +148,6 @@ class QuantSpec:
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "QuantSpec":
         return dataclasses.replace(self, **kw)
-
-    @classmethod
-    def from_legacy(cls, *, bits: Union[int, float] = 4, method: str = "bcq",
-                    group_size: int = 128, iters: int = 5,
-                    backend: str = "auto",
-                    bit_map: Optional[Mapping[str, int]] = None) -> "QuantSpec":
-        """Shim for the pre-registry kwargs (one-release deprecation path)."""
-        return cls(format=method, bits=bits, group_size=group_size,
-                   iters=iters, backend=backend or "auto",
-                   overrides=dict(bit_map) if bit_map else ())
 
     # ------------------------------------------------------------------
     # JSON round-trip

@@ -30,11 +30,12 @@ paged engine (greedy outputs must match token-for-token) and still
 serves models the paged cache doesn't cover (SSM/hybrid, enc-dec,
 sliding-window).
 
-Both work with dense or BCQ-quantized params transparently — the
-config's :class:`~repro.quant.QuantSpec` (or legacy ``gemm_backend``
-shim) sets the backend *preference* and the registry's capability
-negotiation picks the execution path per weight — the deployment shape
-of the paper's engine: weight-only-quantized LLM decode.
+Both work with dense or plane-bundle-quantized params transparently —
+the config's :class:`~repro.quant.QuantSpec` sets the backend
+*preference* and the registry's capability negotiation picks the
+execution path per weight (kind-aware: ternary bundles route to the
+dedicated kernel) — the deployment shape of the paper's engine:
+weight-only-quantized LLM decode.
 """
 from __future__ import annotations
 

@@ -24,7 +24,7 @@ def _model_shapes(arch: str, full: bool):
     import jax
     from repro.configs import get_config, get_reduced
     from repro.models import Model
-    from repro.quantize.ptq import _axes_of, _is_quant_leaf, _lead_batch, _walk
+    from repro.quant.ptq import _axes_of, _is_quant_leaf, _lead_batch, _walk
 
     cfg = get_config(arch) if full else get_reduced(arch)
     model = Model(cfg)
@@ -58,7 +58,7 @@ def main(argv=None) -> int:
                     help="activation dtype to tune for (cache keys embed "
                          "it; defaults to the arch's dtype, else float32)")
     ap.add_argument("--kernels", nargs="+", default=["lut_gemm", "bcq_matmul"],
-                    choices=["lut_gemm", "bcq_matmul"])
+                    choices=["lut_gemm", "bcq_matmul", "ternary_matmul"])
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--max-candidates", type=int, default=0,

@@ -62,6 +62,9 @@ def _kernel_fns(kernel: str):
     if kernel == "bcq_matmul":
         from repro.kernels.bcq_matmul import bcq_matmul, ref
         return bcq_matmul, ref.bcq_matmul_ref
+    if kernel == "ternary_matmul":
+        from repro.kernels.ternary_matmul import ternary_matmul, ref
+        return ternary_matmul, ref.ternary_ref
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
@@ -81,16 +84,17 @@ def tune(kernel: str, x: jax.Array, w: BCQWeight, *, mu: int = 4,
 
     x2 = x.reshape(-1, x.shape[-1])
     b, m, nn = x2.shape[0], w.out_features, w.in_features
-    # mu only affects the LUT kernel; key it as 0 for bcq_matmul so the
-    # cache key matches what the op wrapper's dispatch looks up.
-    key_mu = mu if kernel == "lut_gemm" else 0
+    # mu only affects the LUT-reading kernels; key it as 0 for bcq_matmul
+    # so the cache key matches what the op wrapper's dispatch looks up.
+    lut_like = kernel in ("lut_gemm", "ternary_matmul")
+    key_mu = mu if lut_like else 0
     key = cache_mod.cache_key(kernel, b=b, m=m, n=nn, dtype=x2.dtype,
                               mu=key_mu, group_size=w.group_size,
                               interpret=interpret)
     cands = candidate_configs(kernel, b=b, m=m, n=nn, mu=mu,
                               group_size=w.group_size,
                               max_candidates=max_candidates)
-    if kernel == "lut_gemm":
+    if lut_like:
         want = np.asarray(oracle(x2, w, mu=mu, out_dtype=jnp.float32))
     else:
         want = np.asarray(oracle(x2, w, out_dtype=jnp.float32))
@@ -99,7 +103,7 @@ def tune(kernel: str, x: jax.Array, w: BCQWeight, *, mu: int = 4,
     timings = []
     for cfg in cands:
         kw = cfg.to_kwargs(kernel)
-        if kernel == "lut_gemm":
+        if lut_like:
             kw["mu"] = mu
         run = lambda kw=kw: op(x2, w, interpret=interpret,
                                out_dtype=jnp.float32, **kw)
@@ -146,24 +150,28 @@ def tune_shape(kernel: str, *, b: int, m: int, n: int, bits: int = 4,
                seed: int = 0, **kw) -> TuneResult:
     """Tune a synthetic (b, m, n) problem — tuning depends on shapes and
     dtypes, not weight values, so RTN-quantized gaussian weights stand in
-    for the real layer."""
+    for the real layer (ternary-quantized for the ternary kernel)."""
     rng = np.random.default_rng(seed)
     W = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
     x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32), dtype=dtype)
-    wq = from_uniform(W, bits=bits, group_size=group_size)
+    if kernel == "ternary_matmul":
+        from repro.quant.formats import quantize_ternary    # lazy: registry
+        wq = quantize_ternary(W, group_size=group_size)
+    else:
+        wq = from_uniform(W, bits=bits, group_size=group_size)
     return tune(kernel, x, wq, mu=mu, **kw)
 
 
 def collect_bcq_specs(params) -> list:
-    """Distinct (out_features, in_features, bits, group_size) across every
-    BCQWeight leaf (scan-stacked leaves count once — the per-layer GEMM
-    problem is identical)."""
-    from repro.quantize.ptq import _walk          # shared pytree walker
+    """Distinct (out_features, in_features, bits, group_size, kind)
+    across every plane-bundle leaf (scan-stacked leaves count once — the
+    per-layer GEMM problem is identical)."""
+    from repro.quant.ptq import _walk          # shared pytree walker
     specs = []
     for _, leaf in _walk(params):
         if isinstance(leaf, BCQWeight):
             spec = (leaf.out_features, leaf.in_features,
-                    int(leaf.packed.shape[-3]), leaf.group_size)
+                    int(leaf.packed.shape[-3]), leaf.group_size, leaf.kind)
             if spec not in specs:
                 specs.append(spec)
     return specs
@@ -183,9 +191,12 @@ def pretune_params(params, *, kernels: Sequence[str] = ("lut_gemm",),
     specs = collect_bcq_specs(params)
     results = []
     done = set()
-    for m, n, bits, group_size in specs:
+    for m, n, bits, group_size, kind in specs:
+        # ternary layers serve through the dedicated kernel only; bcq
+        # layers tune whatever the caller asked for
+        use_kernels = ("ternary_matmul",) if kind == "ternary" else kernels
         for b in batch_sizes:
-            for kernel in kernels:
+            for kernel in use_kernels:
                 # batch sizes sharing a pow2 bucket share a cache key
                 tag = (kernel, m, n, bits, group_size,
                        cache_mod.bucket_batch(b))

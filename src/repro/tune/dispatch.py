@@ -73,10 +73,15 @@ def kernel_unsupported_reason(kernel: str, *, m: int, n: int,
         decompressing ``kv_map_fn`` and stays gathered
         (``paged_prefill`` reason ``"latent"``).
 
+    The GEMM kernels additionally accept a ``kind`` cap (the
+    PlaneBundle layout kind): ``ternary_matmul`` only consumes
+    ``kind="ternary"`` bundles, while ``lut_gemm``/``bcq_matmul`` read
+    generic ``kind="bcq"`` planes (reason ``"kind"`` either way).
+
     Reasons: ``"unknown_kernel"``, ``"tp"``, ``"heads"``, ``"shape"``,
     ``"window"``, ``"kv_dtype"``, ``"latent"``, ``"group_size"``,
-    ``"bits"``.  Every non-None return is also recorded on the active
-    trace (``record_kernel_unsupported``).
+    ``"bits"``, ``"kind"``.  Every non-None return is also recorded on
+    the active trace (``record_kernel_unsupported``).
     """
     reason = _unsupported_reason(kernel, m=m, n=n, group_size=group_size,
                                  bits=bits, **caps)
@@ -120,6 +125,12 @@ def _unsupported_reason(kernel: str, *, m: int, n: int, group_size: int,
         return "group_size"
     if bits is not None and not 1 <= bits <= 8:
         return "bits"
+    kind = caps.get("kind")
+    if kind is not None:
+        if kernel == "ternary_matmul" and kind != "ternary":
+            return "kind"
+        if kernel != "ternary_matmul" and kind == "ternary":
+            return "kind"
     return None
 
 

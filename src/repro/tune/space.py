@@ -23,7 +23,13 @@ import dataclasses
 import itertools
 from typing import Sequence
 
-KERNELS = ("lut_gemm", "bcq_matmul", "paged_attention", "paged_prefill")
+KERNELS = ("lut_gemm", "bcq_matmul", "ternary_matmul", "paged_attention",
+           "paged_prefill")
+
+# kernels whose RAC read mode is a live config axis (ternary_matmul is
+# always half-table — the sign decode IS the datapath — so only the
+# read mode varies for it)
+LUT_KERNELS = ("lut_gemm", "ternary_matmul")
 
 # the paged-attention kernel family shares one config axis (the kv-head
 # tile); "paged_prefill" is a distinct kernel NAME so its cache entries
@@ -65,6 +71,8 @@ class KernelConfig:
                   block_n=self.block_n)
         if kernel == "lut_gemm":
             kw.update(read_mode=self.read_mode, half_lut=self.half_lut)
+        elif kernel == "ternary_matmul":
+            kw.update(read_mode=self.read_mode)
         return kw
 
     def to_dict(self) -> dict:
@@ -105,7 +113,7 @@ def clamp_config(cfg: KernelConfig, kernel: str, *, b: int, m: int, n: int,
     block_n = _round_up(min(cfg.block_n, n_pad), group_size)
     block_m = _round_up(min(cfg.block_m, _round_up(max(m, 1), 8)), 8)
     block_b = _round_up(min(cfg.block_b, _round_up(max(b, 1), 8)), 8)
-    read_mode = cfg.read_mode if kernel == "lut_gemm" else "onehot"
+    read_mode = cfg.read_mode if kernel in LUT_KERNELS else "onehot"
     half_lut = cfg.half_lut if kernel == "lut_gemm" else True
     return KernelConfig(block_b=block_b, block_m=block_m, block_n=block_n,
                         read_mode=read_mode, half_lut=half_lut)
@@ -159,9 +167,9 @@ def candidate_configs(kernel: str, *, b: int, m: int, n: int, mu: int = 4,
         if max_candidates and len(out) > max_candidates:
             out = out[:max_candidates]
         return out
-    if kernel == "lut_gemm" and group_size % mu:
+    if kernel in LUT_KERNELS and group_size % mu:
         raise ValueError(f"group_size {group_size} not divisible by mu {mu}")
-    modes = READ_MODES if kernel == "lut_gemm" else ("onehot",)
+    modes = READ_MODES if kernel in LUT_KERNELS else ("onehot",)
     halves = (True, False) if kernel == "lut_gemm" else (True,)
 
     for bb, bm, bn, rm, hl in itertools.product(

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import bcq
 from repro.core.lut_gemm import bcq_apply
-from repro.quantize.optq import optq_quantize, uniform_to_bcq
+from repro.quant.optq import optq_quantize, uniform_to_bcq
 
 
 def _aniso(seed, n_samples, n):

@@ -2,7 +2,6 @@
 with capability negotiation + fallback, mixed precision planning, and
 quantized-checkpoint save -> load -> serve equivalence."""
 import json
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +15,8 @@ from repro.quant import (QuantSpec, QuantManifest, available_backends,
                          available_formats, execute_linear, fallback_chain,
                          get_format, kernel_for, load_quantized, plan_bits,
                          quantize_model, resolve_backend, save_quantized)
-from repro.quantize import collect_linears
-from repro.quantize import quantize_model as legacy_quantize_model
+from repro.quant.ptq import collect_linears
+from repro.quant.ptq import quantize_model as ptq_quantize_model
 from repro.serve import Request, ServeEngine
 
 RNG = jax.random.PRNGKey(0)
@@ -63,24 +62,28 @@ class TestSpec:
         assert not QuantSpec(bits=3).is_mixed
 
     def test_ternary_bits_default_and_conflict(self):
-        assert QuantSpec(format="ternary").bits == 2
-        assert QuantSpec(format="ternary", bits=2).bits == 2
-        with pytest.raises(ValueError, match="2 planes"):
+        from repro.core.plane import TERNARY_BITS
+        # ternary carries log2(3) bits/weight; 1.58 and the historical
+        # "2" (plane count) both canonicalize onto the sentinel
+        assert QuantSpec(format="ternary").bits == TERNARY_BITS
+        assert QuantSpec(format="ternary", bits=2).bits == TERNARY_BITS
+        assert QuantSpec(format="ternary", bits=1.58).bits == TERNARY_BITS
+        with pytest.raises(ValueError, match="log2"):
             QuantSpec(format="ternary", bits=4)
+
+    def test_sub2_bits_candidates_include_ternary(self):
+        from repro.core.plane import TERNARY_BITS
+        s = QuantSpec(bits=1.58)
+        assert s.bits == TERNARY_BITS and s.is_fractional
+        assert s.candidate_bits == (TERNARY_BITS, 2, 3)
+        # integer-candidate fractional plans are unchanged
+        assert QuantSpec(bits=2.4).candidate_bits == (2, 3, 4)
 
     def test_file_roundtrip(self, tmp_path):
         p = str(tmp_path / "spec.json")
         s = QuantSpec(bits=3, group_size=32)
         s.save(p)
         assert QuantSpec.load(p) == s
-
-    def test_legacy_kwargs_shim(self):
-        s = QuantSpec.from_legacy(bits=3, method="uniform", group_size=64,
-                                  iters=2, backend="bcq_xla",
-                                  bit_map={"a": 2})
-        assert (s.format, s.bits, s.group_size, s.iters, s.backend) == \
-            ("rtn", 3.0, 64, 2, "bcq_xla")
-        assert s.overrides_map == {"a": 2}
 
     def test_validation(self):
         with pytest.raises(ValueError):
@@ -109,20 +112,44 @@ class TestFormats:
         assert np.allclose(via_registry.alpha, direct.alpha)
 
     def test_ternary_correctness_vs_reference(self):
-        """Dequantized ternary must match the independent {-a,0,+a}
-        reference exactly (the BCQ plane encoding adds no error)."""
+        """Dequantized ternary must match an independent numpy run of the
+        octav-style alternating fixed point exactly (the sign+mask plane
+        encoding adds no error)."""
         w = _w(out=8, n=32, seed=1)
         g = 8
         wq = get_format("ternary").quantize(w, bits=2, group_size=g)
-        assert wq.bits == 2                      # always two planes
+        assert wq.kind == "ternary"
+        assert wq.bits == 2                      # sign + mask planes
+        assert wq.z is None and wq.alpha.shape[0] == 1
         got = np.asarray(dequantize(wq))
 
         wg = np.asarray(w).reshape(8, 32 // g, g)
+        absw = np.abs(wg)
+        a = absw.mean(-1)
+        for _ in range(12):
+            mask = absw > a[..., None] / 2.0
+            a = (absw * mask).sum(-1) / np.maximum(mask.sum(-1), 1)
+        mask = absw > a[..., None] / 2.0
+        ref = (np.sign(wg) * mask * a[..., None]).reshape(8, 32)
+        assert np.allclose(got, ref, atol=1e-6)
+
+    def test_ternary_clipping_beats_twn_threshold(self):
+        """The alternating fixed point must not reconstruct worse than
+        the TWN 0.7*mean|w| heuristic it replaced (MSE, per matrix)."""
+        w = np.asarray(_w(out=16, n=64, seed=7))
+        g = 16
+        wq = get_format("ternary").quantize(jnp.asarray(w), bits=2,
+                                            group_size=g)
+        got = np.asarray(dequantize(wq))
+        mse_opt = float(((w - got) ** 2).mean())
+
+        wg = w.reshape(16, 64 // g, g)
         delta = 0.7 * np.abs(wg).mean(-1, keepdims=True)
         mask = np.abs(wg) > delta
         a = (np.abs(wg) * mask).sum(-1) / np.maximum(mask.sum(-1), 1)
-        ref = (np.sign(wg) * mask * a[..., None]).reshape(8, 32)
-        assert np.allclose(got, ref, atol=1e-6)
+        twn = (np.sign(wg) * mask * a[..., None]).reshape(16, 64)
+        mse_twn = float(((w - twn) ** 2).mean())
+        assert mse_opt <= mse_twn + 1e-9
 
     def test_ternary_three_levels_per_group(self):
         w = _w(out=4, n=32, seed=2)
@@ -154,7 +181,10 @@ class TestBackends:
         assert fallback_chain("mxu_pallas") == ("mxu_pallas", "bcq_xla",
                                                 "dense")
         assert fallback_chain("lut_pallas")[-1] == "dense"
+        assert fallback_chain("ternary_pallas") == ("ternary_pallas",
+                                                    "bcq_xla", "dense")
         assert fallback_chain(None) == fallback_chain("auto")
+        assert fallback_chain("auto")[0] == "ternary_pallas"
         with pytest.raises(KeyError):
             fallback_chain("no_such_backend")
 
@@ -168,6 +198,18 @@ class TestBackends:
         assert resolve_backend("lut_pallas", self._wq()) == "lut_pallas"
         assert kernel_for("lut_pallas") == "lut_gemm"
         assert kernel_for("mxu_pallas") == "bcq_matmul"
+        assert kernel_for("ternary_pallas") == "ternary_matmul"
+
+    def test_kind_aware_negotiation(self):
+        wt = get_format("ternary").quantize(_w(), bits=2, group_size=16)
+        wb = self._wq()
+        # the dedicated kernel only claims ternary bundles...
+        assert resolve_backend("ternary_pallas", wt) == "ternary_pallas"
+        assert resolve_backend("ternary_pallas", wb) == "bcq_xla"
+        # ...and the generic plane kernels never claim ternary ones
+        assert resolve_backend("lut_pallas", wt) == "bcq_xla"
+        assert resolve_backend("mxu_pallas", wt) == "bcq_xla"
+        assert resolve_backend("bcq_xla_planes", wt) == "bcq_xla"
 
     def test_capability_fallback_on_stacked_weight(self):
         wq = self._wq()
@@ -201,6 +243,15 @@ class TestBackends:
             y = execute_linear(x, wq, backend=backend)
             assert np.allclose(y, ref, atol=0.1), backend
 
+    def test_execute_linear_ternary_backends_agree(self):
+        wt = get_format("ternary").quantize(_w(), bits=2, group_size=16)
+        x = jnp.array(np.random.default_rng(5).normal(size=(3, 64)),
+                      jnp.float32)
+        ref = x @ dequantize(wt).T
+        for backend in (None, "dense", "bcq_xla", "ternary_pallas"):
+            y = execute_linear(x, wt, backend=backend)
+            assert np.allclose(y, ref, atol=0.1), backend
+
     def test_execute_linear_dense_leaf(self):
         w = _w()
         x = jnp.ones((2, 64), jnp.float32)
@@ -214,17 +265,14 @@ class TestBackends:
 
 
 class TestQuantizeModel:
-    def test_uniform_spec_matches_legacy_path(self):
+    def test_uniform_spec_matches_internal_ptq(self):
         m, params = _model()
         spec = QuantSpec(bits=3, group_size=32, iters=2)
         qp, manifest = quantize_model(params, spec, m.axes())
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            qp_legacy = legacy_quantize_model(params, m.axes(), bits=3,
-                                              method="bcq", group_size=32,
-                                              iters=2)
+        qp_ptq = ptq_quantize_model(params, m.axes(), bits=3,
+                                    method="bcq", group_size=32, iters=2)
         leaves = jax.tree_util.tree_leaves(qp)
-        leaves_l = jax.tree_util.tree_leaves(qp_legacy)
+        leaves_l = jax.tree_util.tree_leaves(qp_ptq)
         assert len(leaves) == len(leaves_l)
         for a, b in zip(leaves, leaves_l):
             assert np.array_equal(np.asarray(a), np.asarray(b))
@@ -296,13 +344,29 @@ class TestQuantizeModel:
             quantize_model(params, QuantSpec(bits=0), m.axes())
 
     def test_ternary_model_end_to_end(self):
+        from repro.core.plane import TERNARY_BITS
         m, params = _model()
         spec = QuantSpec(format="ternary", group_size=32)
         qp, manifest = quantize_model(params, spec, m.axes())
-        assert manifest.avg_plane_bits == 2.0
+        assert manifest.avg_plane_bits == 2.0        # sign + mask stored
+        for layer in manifest.layers:
+            assert layer["format"] == "ternary"
+            assert layer["effective_bits"] == TERNARY_BITS
         mq = Model(m.cfg.replace(quant=spec))
         logits = mq.forward(qp, {"tokens": jnp.ones((1, 8), jnp.int32)})
         assert bool(jnp.isfinite(logits).all())
+
+    def test_ternary_manifest_bytes_beat_generic_2bit(self):
+        """Ternary must report STRICTLY fewer packed bytes than generic
+        2-bit BCQ on the same model (1 scale row, no offset) — the
+        manifest no longer overstates ternary model size."""
+        m, params = _model()
+        _, man_t = quantize_model(params, QuantSpec(format="ternary",
+                                                    group_size=32), m.axes())
+        _, man_b = quantize_model(params, QuantSpec(bits=2, iters=0,
+                                                    group_size=32), m.axes())
+        assert man_t.quant_bytes < man_b.quant_bytes
+        assert man_t.avg_effective_bits < man_b.avg_effective_bits
 
 
 # ---------------------------------------------------------------------------
@@ -368,34 +432,27 @@ class TestQuantCheckpoint:
 
 
 # ---------------------------------------------------------------------------
-# legacy shims keep working (one-release deprecation window)
+# config integration (the removed gemm_backend/quant_bits shims must stay
+# removed — QuantSpec is the single source of truth)
 # ---------------------------------------------------------------------------
 
 
-class TestLegacyShims:
-    def test_legacy_quantize_model_warns_but_works(self):
-        m, params = _model()
-        with pytest.warns(DeprecationWarning):
-            qp = legacy_quantize_model(params, m.axes(), bits=2,
-                                       method="rtn", group_size=32, iters=1)
-        mq = Model(m.cfg.replace(gemm_backend="bcq_xla"))
-        logits = mq.forward(qp, {"tokens": jnp.ones((1, 8), jnp.int32)})
-        assert bool(jnp.isfinite(logits).all())
-
-    def test_legacy_linear_apply_backend_string(self):
+class TestConfigIntegration:
+    def test_linear_apply_backend_string(self):
         from repro.core import linear_apply
         wq = get_format("bcq").quantize(_w(), bits=2, group_size=16, iters=1)
         x = jnp.ones((2, 64), jnp.float32)
         y = linear_apply(wq, x, backend="bcq_xla")
         assert np.allclose(y, x @ dequantize(wq).T, atol=0.1)
 
-    def test_config_backend_preference_shims(self):
+    def test_config_backend_preference_via_spec_only(self):
+        import dataclasses
         cfg = get_reduced("opt_6_7b")
-        assert cfg.backend_preference == cfg.gemm_backend
+        field_names = {f.name for f in dataclasses.fields(type(cfg))}
+        assert "gemm_backend" not in field_names     # shim removed
+        assert "quant_bits" not in field_names       # shim removed
+        assert not hasattr(QuantSpec, "from_legacy")
         assert cfg.quant_spec() is None
-        legacy = cfg.replace(gemm_backend="bcq_xla", quant_bits=3)
-        assert legacy.backend_preference == "bcq_xla"
-        assert legacy.quant_spec().bits == 3.0
         spec = QuantSpec(bits=2, backend="lut_pallas")
         assert cfg.replace(quant=spec).backend_preference == "lut_pallas"
         assert cfg.replace(quant=spec).quant_spec() is spec

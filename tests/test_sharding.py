@@ -59,7 +59,7 @@ def test_bcq_weight_shardings_and_lowering():
     import jax, json
     import jax.numpy as jnp
     from repro.parallel import sharding as shd
-    from repro.quantize import abstract_quantized_params
+    from repro.quant.ptq import abstract_quantized_params
     from repro.models.module import ParamDesc, abstract_params, logical_axes
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((2, 4), ("data", "model"))

@@ -237,6 +237,11 @@ class TestTuner:
         assert res.best_time > 0
 
     def test_collect_bcq_specs_dedupes(self):
+        from repro.quant.formats import quantize_ternary
         _, wq = _problem(m=16, n=64, group_size=32, bits=2)
-        params = {"a": {"q": wq, "k": wq}, "b": [wq], "dense": jnp.ones((4,))}
-        assert T.collect_bcq_specs(params) == [(16, 64, 2, 32)]
+        wt = quantize_ternary(wq.dequantize(), group_size=32)
+        params = {"a": {"q": wq, "k": wq}, "b": [wq, wt],
+                  "dense": jnp.ones((4,))}
+        # same shape, different layout kind -> two distinct GEMM problems
+        assert T.collect_bcq_specs(params) == [(16, 64, 2, 32, "bcq"),
+                                               (16, 64, 2, 32, "ternary")]
